@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: wall time of the pure-JAX reference paths on CPU
+(the kernels themselves target TPU; interpret-mode timing is meaningless),
+plus the analytic VMEM working set + arithmetic intensity per kernel —
+the quantities the BlockSpec choices were made against."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.iou_match.ref import iou_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.thompson.ref import thompson_ref
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    rnd = lambda i, s: jax.random.normal(jax.random.fold_in(key, i), s)
+
+    # flash attention ref
+    q, k, v = rnd(1, (1, 512, 8, 64)), rnd(2, (1, 512, 2, 64)), rnd(3, (1, 512, 2, 64))
+    f = jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True))
+    us = timed(f, q, k, v)
+    flops = 2 * 512 * 512 * 8 * 64 * 2 / 2
+    emit("flash_attention_ref_512", us, f"vmem_tile=2.4MB@bq256 ai={flops/(512*8*64*4*3):.0f}")
+
+    # flash decode ref
+    qd = rnd(4, (4, 8, 64))
+    kc, vc = rnd(5, (4, 2048, 2, 64)), rnd(6, (4, 2048, 2, 64))
+    cl = jnp.full((4,), 2048, jnp.int32)
+    f = jax.jit(decode_ref)
+    emit("flash_decode_ref_2k", timed(f, qd, kc, vc, cl), "vmem_cell<1MB@bk512")
+
+    # ssd scan ref
+    x = rnd(7, (8, 1024, 64))
+    dt = jax.nn.softplus(rnd(8, (8, 1024)))
+    bm, cm = rnd(9, (8, 1024, 128)) * 0.3, rnd(10, (8, 1024, 128)) * 0.3
+    a = -jnp.exp(rnd(11, (8,)))
+    f = jax.jit(lambda *t: ssd_ref(*t, chunk=128))
+    emit("ssd_scan_ref_1k", timed(f, x, dt, bm, cm, a), "vmem_cell=0.3MB@Q128")
+
+    # thompson ref — the paper's per-step decision at 10^5 chunks
+    alpha = jnp.abs(rnd(12, (100_000,))) + 0.1
+    beta = jnp.abs(rnd(13, (100_000,))) * 10 + 1
+    z = rnd(14, (50, 100_000))
+    f = jax.jit(thompson_ref)
+    emit("thompson_ref_100k_chunks_50_cohorts", timed(f, alpha, beta, z),
+         "fused-kernel streams 4B/chunk/cohort")
+
+    # iou ref
+    a_boxes = jax.random.uniform(jax.random.fold_in(key, 15), (64, 4))
+    b_boxes = jax.random.uniform(jax.random.fold_in(key, 16), (4096, 4))
+    f = jax.jit(iou_ref)
+    emit("iou_ref_64x4096", timed(f, a_boxes, b_boxes), "tile=128x512")
+
+
+if __name__ == "__main__":
+    main()

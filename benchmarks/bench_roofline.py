@@ -1,0 +1,49 @@
+"""Roofline summary table from the dry-run artifacts (EXPERIMENTS §Roofline).
+
+Reads artifacts/dryrun/<mesh>/*.json and prints the per-cell three-term
+roofline.  This is the benchmark twin of the §Roofline deliverable — run
+``python -m repro.launch.dryrun`` first (or rely on the checked-in
+artifacts).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh_tag: str):
+    d = os.path.join(ART, mesh_tag)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for f in sorted(os.listdir(d)):
+        with open(os.path.join(d, f)) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def main():
+    for mesh_tag in ("single_pod_16x16", "multi_pod_2x16x16",
+                     "single_pod_16x16_optimized"):
+        recs = load(mesh_tag)
+        if not recs:
+            continue
+        print(f"\n== {mesh_tag} ==")
+        print("cell,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+              "useful_ratio,mfu@roofline,hbm_tpu_GiB,fits")
+        for r in recs:
+            if r.get("skipped"):
+                print(f"{r['name']},SKIPPED({r['skipped']})")
+                continue
+            print(
+                f"{r['name']},{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+                f"{r['t_collective_s']:.4g},{r['bottleneck']},"
+                f"{r['useful_flops_ratio']:.3f},{r['mfu_at_roofline']:.3f},"
+                f"{r.get('analytic_hbm_bytes', 0)/2**30:.2f},{r.get('fits_hbm')}"
+            )
+
+
+if __name__ == "__main__":
+    main()

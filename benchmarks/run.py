@@ -1,0 +1,45 @@
+"""Benchmark harness entry: one section per paper table/figure.
+
+  bench_bias     -- paper 3.3.2 / Fig. 2 (estimator + Poisson validation)
+  bench_savings  -- paper Figs. 3-4 (frames-processed savings vs random+)
+  bench_batched  -- paper 3.7.1 (cohort batching) + straggler model
+  bench_overhead -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
+  bench_kernels  -- kernel reference microbenchmarks (CSV)
+  bench_roofline -- Roofline table from dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import (
+        bench_batched,
+        bench_bias,
+        bench_chunking,
+        bench_kernels,
+        bench_overhead,
+        bench_roofline,
+        bench_savings,
+    )
+
+    sections = [
+        ("bias_validation(fig2)", lambda: bench_bias.main()),
+        ("savings(fig3-4)", lambda: bench_savings.main(quick=quick)),
+        ("chunking(sec3.5)", bench_chunking.main),
+        ("batched(sec3.7.1)", bench_batched.main),
+        ("overhead(fig6)", bench_overhead.main),
+        ("kernels", bench_kernels.main),
+        ("roofline", bench_roofline.main),
+    ]
+    for name, fn in sections:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"[{name} done in {time.time() - t0:.1f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""HLO text parsing: collective bytes + op census.
+
+``cost_analysis`` does not expose collective traffic, so we parse the
+compiled (SPMD-partitioned) HLO text: shapes there are already
+*per-device*, so summing operand bytes of every collective op gives the
+per-device collective payload of one step.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  "%all-reduce.5 = f32[16,128]{1,0} all-reduce(%x), ..."
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+([a-z0-9\-]+)\("
+)
+_TUPLE_RE = re.compile(r"=\s*\(([^)]*)\)\s+([a-z0-9\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device output bytes of each collective op kind.
+
+    Uses the *result* shape (for all-gather this is the gathered size, a
+    fair proxy for link traffic; for reduce-scatter the scattered output;
+    for all-reduce the full buffer — matching the ring-transfer volume
+    within a small constant).
+    """
+    totals: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not any(f" {op}(" in stripped or stripped.startswith(op) for op in COLLECTIVE_OPS):
+            continue
+        for op in COLLECTIVE_OPS:
+            if f" {op}(" not in stripped:
+                continue
+            if f" {op}-start(" in stripped or f" {op}-done(" in stripped:
+                continue
+            m = _OP_RE.search(stripped)
+            nbytes = 0
+            if m and m.group(3) == op:
+                nbytes = _shape_bytes(m.group(1), m.group(2))
+            else:
+                mt = _TUPLE_RE.search(stripped)
+                if mt and mt.group(2) == op:
+                    for dtype, dims in _SHAPE_RE.findall(mt.group(1)):
+                        nbytes += _shape_bytes(dtype, dims)
+            if nbytes:
+                totals[op] += nbytes
+                counts[op] += 1
+    return {
+        "bytes_by_op": dict(totals),
+        "counts_by_op": dict(counts),
+        "total_bytes": int(sum(totals.values())),
+    }
+
+
+# computation header: "%name (params...) -> type {"; params may contain
+# nested parens (tuple types), so only anchor on the name and trailing "{"
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_WHILE_RE2 = re.compile(r"while\(.*?\), body=%?([\w\.\-]+), condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\{?\}? constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Map computation name → its body lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Heuristic trip count of a scan-style while: the s32 bound constant in
+    the condition (jax lowers scan as `i < N`).  Falls back to 1."""
+    consts = []
+    for line in cond_lines:
+        consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def _line_collective_bytes(line: str) -> tuple[str, int] | None:
+    stripped = line.strip()
+    for op in COLLECTIVE_OPS:
+        if f" {op}(" not in stripped:
+            continue
+        if f" {op}-start(" in stripped or f" {op}-done(" in stripped:
+            continue
+        m = _OP_RE.search(stripped)
+        if m and m.group(3) == op:
+            return op, _shape_bytes(m.group(1), m.group(2))
+        mt = _TUPLE_RE.search(stripped)
+        if mt and mt.group(2) == op:
+            nbytes = sum(
+                _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(mt.group(1))
+            )
+            return op, nbytes
+    return None
+
+
+def collective_bytes_scaled(hlo_text: str) -> dict:
+    """Collective bytes with while-loop trip-count scaling.
+
+    ``HloCostAnalysis``-style single-count is wrong for scan-over-layers /
+    microbatch loops; this walks the computation graph from ENTRY,
+    multiplying collectives inside a while body by the loop's trip count
+    (parsed from the condition's s32 bound).
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+    totals: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+
+    def walk(comp: str, mult: float, seen: tuple):
+        if comp not in comps or comp in seen:
+            return
+        for line in comps[comp]:
+            got = _line_collective_bytes(line)
+            if got:
+                op, nbytes = got
+                totals[op] += nbytes * mult
+                counts[op] += 1
+            wm = _WHILE_RE.search(line) or _WHILE_RE2.search(line)
+            if wm:
+                a, b = wm.group(1), wm.group(2)
+                cond, body = (a, b) if _WHILE_RE.search(line) else (b, a)
+                trips = _trip_count(comps.get(cond, []))
+                walk(body, mult * max(trips, 1), seen + (comp,))
+
+    if entry:
+        walk(entry, 1.0, ())
+    else:  # fallback: flat parse
+        return collective_bytes(hlo_text)
+    return {
+        "bytes_by_op": {k: int(v) for k, v in totals.items()},
+        "counts_by_op": dict(counts),
+        "total_bytes": int(sum(totals.values())),
+    }
+
+
+def op_census(hlo_text: str, ops=("dot", "custom-call", "while", "fusion")) -> dict:
+    census: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if f" {op}(" in line:
+                census[op] += 1
+    return dict(census)

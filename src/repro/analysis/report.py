@@ -1,0 +1,129 @@
+"""Render EXPERIMENTS.md sections from dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.analysis.report            # print tables
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def load(mesh_tag: str) -> list[dict]:
+    d = os.path.join(ART, mesh_tag)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def roofline_table(mesh_tag: str) -> str:
+    recs = load(mesh_tag)
+    if not recs:
+        return f"(no artifacts for {mesh_tag})"
+    lines = [
+        "| cell | t_compute | t_memory | t_collective | bottleneck | "
+        "MODEL_FLOPS/HLO | MFU@roofline | HBM/chip (analytic) | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["name"].split(":")[0],
+                             order.get(r["name"].split(":")[1], 9)))
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['name']} | — | — | — | *skipped: {r['skipped']}* | — | — | — | — |"
+            )
+            continue
+        lines.append(
+            "| {name} | {tc} | {tm} | {tl} | **{b}** | {ur:.2f} | {mfu:.1%} | "
+            "{hbm:.1f} GiB | {fits} |".format(
+                name=r["name"],
+                tc=_fmt_s(r["t_compute_s"]),
+                tm=_fmt_s(r["t_memory_s"]),
+                tl=_fmt_s(r["t_collective_s"]),
+                b=r["bottleneck"],
+                ur=r["useful_flops_ratio"],
+                mfu=r["mfu_at_roofline"],
+                hbm=r.get("analytic_hbm_bytes", 0) / 2**30,
+                fits="✓" if r.get("fits_hbm") else "✗",
+            )
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh_tag: str) -> str:
+    recs = load(mesh_tag)
+    if not recs:
+        return f"(no artifacts for {mesh_tag})"
+    lines = [
+        "| cell | HLO GFLOPs/dev | HLO GB/dev | collective GB/dev (by op) | "
+        "HBM cpu-analysis | HBM analytic | compile (cost+mem) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: r["name"]):
+        if r.get("skipped"):
+            continue
+        ops = ", ".join(
+            f"{k.replace('all-','a-')}: {v/2**30:.2f}"
+            for k, v in sorted(r["collective"].get("bytes_by_op", {}).items())
+        )
+        lines.append(
+            "| {name} | {fl:.1f} | {by:.1f} | {coll} | {hc:.1f} GiB | {ha:.1f} GiB "
+            "| {t1:.0f}+{t2:.0f}s |".format(
+                name=r["name"],
+                fl=r["hlo_flops_per_dev"] / 1e9,
+                by=r["hlo_bytes_per_dev"] / 1e9,
+                coll=ops or "0",
+                hc=r["hbm_footprint_bytes"] / 2**30,
+                ha=r.get("analytic_hbm_bytes", 0) / 2**30,
+                t1=r.get("t_cost_config_s", 0),
+                t2=r.get("t_mem_config_s", 0),
+            )
+        )
+    return "\n".join(lines)
+
+
+def summary_stats(mesh_tag: str) -> dict:
+    recs = [r for r in load(mesh_tag) if not r.get("skipped")]
+    if not recs:
+        return {}
+    import collections
+
+    bn = collections.Counter(r["bottleneck"] for r in recs)
+    return {
+        "cells": len(recs),
+        "bottlenecks": dict(bn),
+        "all_fit": all(r.get("fits_hbm") for r in recs),
+        "worst_mfu": min(r["mfu_at_roofline"] for r in recs),
+        "best_mfu": max(r["mfu_at_roofline"] for r in recs),
+    }
+
+
+def main():
+    for tag in ("single_pod_16x16", "multi_pod_2x16x16",
+                "single_pod_16x16_optimized", "multi_pod_2x16x16_optimized"):
+        recs = load(tag)
+        if not recs:
+            continue
+        print(f"\n## {tag}\n")
+        print(roofline_table(tag))
+        print()
+        print(summary_stats(tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §6).
+
+Hardware constants: TPU v5e-class target.
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: 50 GB/s per link
+
+terms (seconds, per step, per chip — cost_analysis is per-device after
+SPMD partitioning, verified in DESIGN.md §6):
+  compute    = HLO_FLOPs / peak
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / ICI_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+HBM_PER_CHIP = 16 * 1024**3
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    name: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per device
+    hlo_bytes: float          # per device
+    collective: dict          # parsed from HLO (per device)
+    model_flops: float        # analytic useful FLOPs (global)
+    arg_bytes: float
+    temp_bytes: float
+    out_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective.get("total_bytes", 0) / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step estimate: max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips) — remat/padding/dispatch waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        denom = self.step_time * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def fits_hbm(self) -> bool:
+        return (self.arg_bytes + self.temp_bytes + self.out_bytes) <= HBM_PER_CHIP
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "collective": self.collective,
+            "model_flops": self.model_flops,
+            "arg_bytes": self.arg_bytes,
+            "temp_bytes": self.temp_bytes,
+            "out_bytes": self.out_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time,
+            "useful_flops_ratio": self.useful_ratio,
+            "mfu_at_roofline": self.mfu,
+            "fits_hbm": self.fits_hbm,
+        }
+
+
+def from_compiled(
+    name: str,
+    mesh_desc: str,
+    chips: int,
+    compiled,
+    hlo_text: str,
+    model_flops: float,
+) -> Roofline:
+    from repro.analysis.hlo import collective_bytes
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    return Roofline(
+        name=name,
+        mesh=mesh_desc,
+        chips=chips,
+        hlo_flops=float(ca.get("flops", 0.0)),
+        hlo_bytes=float(ca.get("bytes accessed", 0.0)),
+        collective=collective_bytes(hlo_text),
+        model_flops=model_flops,
+        arg_bytes=float(ma.argument_size_in_bytes),
+        temp_bytes=float(ma.temp_size_in_bytes),
+        out_bytes=float(ma.output_size_in_bytes),
+    )
+
+
+def save_records(path: str, records: list[dict]) -> None:
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+
+
+def load_records(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,78 @@
+"""Architecture registry: ``get_config(arch_id)`` + shape lookup.
+
+All 10 assigned architectures plus the paper's own evaluation setup.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ModelConfig,
+    MoEConfig,
+    RunConfig,
+    ShapeConfig,
+    SSMConfig,
+    scale_down,
+)
+
+from repro.configs import (
+    dbrx_132b,
+    gemma_7b,
+    granite_20b,
+    granite_moe_1b_a400m,
+    jamba_1_5_large_398b,
+    mamba2_370m,
+    phi3_medium_14b,
+    phi3_vision_4_2b,
+    qwen2_5_32b,
+    whisper_base,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        dbrx_132b,
+        granite_moe_1b_a400m,
+        jamba_1_5_large_398b,
+        phi3_medium_14b,
+        qwen2_5_32b,
+        granite_20b,
+        gemma_7b,
+        mamba2_370m,
+        phi3_vision_4_2b,
+        whisper_base,
+    )
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells.  ``long_500k`` only applies to
+    sub-quadratic families unless include_skipped."""
+    for arch, cfg in ARCHS.items():
+        for shape in ALL_SHAPES:
+            skipped = shape.name == "long_500k" and not cfg.sub_quadratic
+            if skipped and not include_skipped:
+                continue
+            yield arch, shape, skipped
+
+
+__all__ = [
+    "ARCHS", "get_config", "get_shape", "cells",
+    "ModelConfig", "MoEConfig", "SSMConfig", "RunConfig", "ShapeConfig",
+    "ALL_SHAPES", "SHAPES_BY_NAME", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K", "scale_down",
+]

@@ -1,0 +1,170 @@
+"""Config dataclasses: model architecture, shapes, run settings.
+
+A ``ModelConfig`` fully determines parameter schema + forward semantics;
+``ShapeConfig`` names one of the assigned input-shape cells; ``RunConfig``
+carries execution knobs (sharding, remat, dry-run unrolling, kernels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden width
+    capacity_factor: float = 1.25
+    every_k_layers: int = 1        # jamba applies MoE every 2nd layer
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk_len: int = 1024          # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 ⇒ d_model // num_heads
+    mlp: str = "swiglu"            # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn_every_k: int = 1          # hybrid: layer l is attention iff (l % k == k-1); 1 ⇒ all attn; 0 ⇒ attn-free
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    encoder_len: int = 1500        # cross-KV length (whisper 30 s @ 50 Hz)
+    # multimodal stub frontends
+    num_patches: int = 0           # vlm: image patches prepended to the sequence
+    patch_dim: int = 0             # vlm: raw patch embedding width (CLIP stub)
+    frontend: str = "none"         # none | vision | audio
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid families)."""
+        return self.family in ("ssm", "hybrid")
+
+    def is_attn_layer(self, layer: int) -> bool:
+        if self.attn_every_k == 0:
+            return False
+        if self.attn_every_k == 1:
+            return True
+        return layer % self.attn_every_k == (self.attn_every_k - 1)
+
+    def is_moe_layer(self, layer: int) -> bool:
+        return self.moe is not None and layer % self.moe.every_k_layers == (
+            self.moe.every_k_layers - 1
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Execution knobs (orthogonal to architecture)."""
+
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+    # attention blocking
+    block_q: int = 2048
+    block_kv: int = 2048
+    causal_block_skip: bool = True     # triangular block enumeration (perf)
+    probs_bf16: bool = False           # bf16 attention probabilities (perf)
+    unroll: bool = False               # python-loop layers/blocks (dry-run)
+    stacked: bool = False              # scan-over-layers (memory-fidelity)
+    # training
+    remat: bool = True
+    microbatches: int = 1              # gradient-accumulation chunks per step
+    fsdp_params: bool = False          # shard weight embed-dims over `data`
+    #   (ZeRO-3 gather-on-use: trades per-token TP psums for per-layer
+    #    weight gathers — the §Perf lever for collective-bound train cells)
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    adam_8bit: bool = False            # 8-bit optimizer state (big models)
+    grad_compression: bool = False     # int8 cross-pod gradient all-reduce
+    sequence_parallel: bool = True     # seq-shard residual stream (train)
+    # moe
+    moe_token_exchange: bool = False   # EP moves tokens, not weights (perf):
+    #   dispatch buffers replicate over `data` so expert matmuls keep the
+    #   F dim data-sharded — O(C·D) token traffic instead of O(E·D·F)
+    #   weight gathers per µbatch (decisive when weights ≫ tokens)
+    use_kernels: bool = False          # route hot ops through Pallas kernels
+
+    def dtype(self):
+        import jax.numpy as jnp
+
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.param_dtype]
+
+
+def scale_down(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,
+               heads: int = 4, kv_heads: int = 0, d_ff: int = 128,
+               vocab: int = 256) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kv = kv_heads or min(cfg.num_kv_heads, heads)
+    kv = max(1, min(kv, heads))
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2), d_ff=d_ff,
+        )
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = dataclasses.replace(cfg.ssm, state_dim=16, head_dim=16, chunk_len=32)
+    return dataclasses.replace(
+        cfg,
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=(64 if cfg.head_dim else 0),
+        d_ff=d_ff,
+        vocab=vocab,
+        moe=moe,
+        ssm=ssm,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        encoder_len=min(cfg.encoder_len, 16),
+        num_patches=min(cfg.num_patches, 8),
+        patch_dim=min(cfg.patch_dim, 32) if cfg.patch_dim else 0,
+    )

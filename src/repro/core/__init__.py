@@ -1,0 +1,33 @@
+"""ExSample core: the paper's contribution as a composable JAX module.
+
+Public API re-exports; see DESIGN.md for the paper <-> module map.
+"""
+from repro.core.state import (
+    SamplerState,
+    init_state,
+    apply_update,
+    apply_cross_chunk_decrement,
+    merge_states,
+    point_estimate,
+    DEFAULT_ALPHA0,
+    DEFAULT_BETA0,
+)
+from repro.core.chunks import ChunkIndex, build_chunks, randomplus_frame
+from repro.core.thompson import choose_chunks, draw_scores, gamma_params
+from repro.core.matcher import MatcherState, init_matcher, match_and_update, pairwise_iou
+from repro.core.exsample import (
+    ExSampleCarry,
+    init_carry,
+    exsample_step,
+    exsample_batch_step,
+    run_search,
+)
+
+__all__ = [
+    "SamplerState", "init_state", "apply_update", "apply_cross_chunk_decrement",
+    "merge_states", "point_estimate", "DEFAULT_ALPHA0", "DEFAULT_BETA0",
+    "ChunkIndex", "build_chunks", "randomplus_frame",
+    "choose_chunks", "draw_scores", "gamma_params",
+    "MatcherState", "init_matcher", "match_and_update", "pairwise_iou",
+    "ExSampleCarry", "init_carry", "exsample_step", "exsample_batch_step", "run_search",
+]

@@ -1,0 +1,152 @@
+"""Baseline frame-selection policies (paper §2.3, §4).
+
+All baselines share ExSample's frame-processing path (detector + matcher +
+stats) and differ only in *which frame is processed next*:
+
+  * ``random``      — uniform with replacement over all frames.
+  * ``randomplus``  — §3.7.2 stratified bit-reversal order over the dataset
+                      (the paper's strongest non-adaptive baseline and the
+                      denominator of every savings number).
+  * ``sequential``  — scan frames in order (the naive full-scan).
+  * ``skip``        — sequential with a fixed stride (e.g. 1 frame/second).
+  * ``greedy``      — argmax of the raw N¹/n point estimate (no Thompson
+                      noise); the ablation showing why randomization matters.
+  * ``surrogate``   — BlazeIt-style: scores every frame with a cheap model
+                      (descending-score processing) after a labelling +
+                      training + scoring preamble; cost accounting for the
+                      preamble lives in ``repro.sim.costmodel``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunks import ChunkIndex, global_randomplus_order
+from repro.core.exsample import DetectorFn, ExSampleCarry, _process_frame
+from repro.core.state import point_estimate
+
+
+def _chunk_of_frame(chunks: ChunkIndex, frame: jax.Array) -> jax.Array:
+    """Map a global frame id to its chunk id (searchsorted over starts)."""
+    return (
+        jnp.searchsorted(chunks.start, frame, side="right").astype(jnp.int32) - 1
+    )
+
+
+@partial(jax.jit, static_argnames=("detector",))
+def fixed_frame_step(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    frame_id: jax.Array,
+    *,
+    detector: DetectorFn,
+) -> ExSampleCarry:
+    """Process one externally-chosen frame (drives every static policy)."""
+    key, k_det = jax.random.split(carry.key)
+    carry = dataclasses.replace(carry, key=key)
+    chunk_id = _chunk_of_frame(chunks, frame_id)
+    return _process_frame(carry, chunks, detector, chunk_id, k_det)
+
+
+@partial(jax.jit, static_argnames=("detector",))
+def greedy_step(
+    carry: ExSampleCarry, chunks: ChunkIndex, *, detector: DetectorFn
+) -> ExSampleCarry:
+    """Greedy point-estimate policy (ties broken by chunk id)."""
+    key, k_det = jax.random.split(carry.key)
+    carry = dataclasses.replace(carry, key=key)
+    chunk_id = jnp.argmax(point_estimate(carry.sampler)).astype(jnp.int32)
+    return _process_frame(carry, chunks, detector, chunk_id, k_det)
+
+
+class FrameSchedule:
+    """Host-side frame-order generators for the static policies."""
+
+    @staticmethod
+    def random(total_frames: int, max_steps: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, total_frames, size=max_steps, dtype=np.int64)
+
+    @staticmethod
+    def randomplus(total_frames: int, max_steps: int, seed: int = 0) -> np.ndarray:
+        order = global_randomplus_order(total_frames, seed=seed)
+        reps = int(np.ceil(max_steps / len(order)))
+        return np.tile(order, reps)[:max_steps]
+
+    @staticmethod
+    def sequential(total_frames: int, max_steps: int, seed: int = 0) -> np.ndarray:
+        return np.arange(max_steps, dtype=np.int64) % total_frames
+
+    @staticmethod
+    def skip(
+        total_frames: int, max_steps: int, stride: int = 30, seed: int = 0
+    ) -> np.ndarray:
+        return (np.arange(max_steps, dtype=np.int64) * stride) % total_frames
+
+
+def run_schedule(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    schedule: np.ndarray,
+    *,
+    detector: DetectorFn,
+    result_limit: int,
+    trace_every: int = 0,
+):
+    """Drive a static policy until result_limit / schedule exhaustion."""
+    trace = []
+    for frame in schedule:
+        carry = fixed_frame_step(
+            carry, chunks, jnp.asarray(int(frame), jnp.int32), detector=detector
+        )
+        if trace_every and int(carry.step) % trace_every == 0:
+            trace.append((int(carry.step), int(carry.results)))
+        if int(carry.results) >= result_limit:
+            break
+    trace.append((int(carry.step), int(carry.results)))
+    return carry, trace
+
+
+def run_greedy(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    result_limit: int,
+    max_steps: int,
+    trace_every: int = 0,
+):
+    trace = []
+    while int(carry.results) < result_limit and int(carry.step) < max_steps:
+        carry = greedy_step(carry, chunks, detector=detector)
+        if trace_every and int(carry.step) % trace_every == 0:
+            trace.append((int(carry.step), int(carry.results)))
+    trace.append((int(carry.step), int(carry.results)))
+    return carry, trace
+
+
+def surrogate_schedule(
+    scores: np.ndarray, *, dedup_window: int = 0
+) -> np.ndarray:
+    """BlazeIt-style descending-score order with optional fixed-time
+    dedup suppression (the paper notes BlazeIt skips a fixed window around
+    returned frames to avoid obvious duplicates)."""
+    order = np.argsort(-scores, kind="stable")
+    if dedup_window <= 1:
+        return order.astype(np.int64)
+    taken: list[int] = []
+    blocked = np.zeros(len(scores), bool)
+    for f in order:
+        if not blocked[f]:
+            taken.append(int(f))
+            lo = max(0, f - dedup_window)
+            hi = min(len(scores), f + dedup_window)
+            blocked[lo:hi] = True
+    # after suppression rounds, append remaining frames by score
+    rest = [int(f) for f in order if int(f) not in set(taken)]
+    return np.asarray(taken + rest, dtype=np.int64)

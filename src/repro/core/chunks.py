@@ -1,0 +1,142 @@
+"""Chunk partitioning and within-chunk sampling order (paper §3.5, §3.7.2).
+
+A *chunk* is a contiguous span of frames of one video file (default: up to
+30 minutes of video — the setting the paper found robust).  ``ChunkIndex``
+maps a dense chunk id to its (video, frame offset, length).
+
+``random+`` (§3.7.2) — hierarchically stratified random order — is realized
+as a **bit-reversal low-discrepancy permutation**: visiting frame offsets in
+bit-reversed order samples one frame per half, then per quarter, … exactly
+the "one per hour, then per half hour, …" refinement the paper describes,
+with O(1) state (a counter) per chunk.  A per-chunk random rotation keeps
+the order unpredictable while preserving stratification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def bit_reverse(i: jax.Array, bits: jax.Array) -> jax.Array:
+    """Reverse the low ``bits`` bits of i (vectorized, i32 in / i32 out)."""
+    i = jnp.asarray(i, jnp.uint32)
+    i = ((i & 0x55555555) << 1) | ((i >> 1) & 0x55555555)
+    i = ((i & 0x33333333) << 2) | ((i >> 2) & 0x33333333)
+    i = ((i & 0x0F0F0F0F) << 4) | ((i >> 4) & 0x0F0F0F0F)
+    i = ((i & 0x00FF00FF) << 8) | ((i >> 8) & 0x00FF00FF)
+    i = (i << 16) | (i >> 16)
+    bits = jnp.asarray(bits, jnp.uint32)
+    return jnp.where(bits > 0, i >> (32 - bits), 0).astype(jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ChunkIndex:
+    """Static geometry of the chunked repository (M chunks)."""
+
+    video_id: jax.Array      # i32[M] — owning video file
+    start: jax.Array         # i32[M] — first global frame id of the chunk
+    length: jax.Array        # i32[M] — frames in the chunk
+    pow2: jax.Array          # i32[M] — next_pow2(length), for bit-reversal
+    bits: jax.Array          # i32[M] — log2(pow2)
+    rotation: jax.Array      # i32[M] — per-chunk random rotation offset
+
+    @property
+    def num_chunks(self) -> int:
+        return self.video_id.shape[0]
+
+    @property
+    def total_frames(self) -> int:
+        return int(np.asarray(self.start[-1] + self.length[-1]))
+
+
+def build_chunks(
+    video_lengths: Sequence[int],
+    *,
+    chunk_frames: int,
+    seed: int = 0,
+) -> ChunkIndex:
+    """Split each video into ceil(len/chunk_frames) chunks (§3.5: by file,
+    then into ≤30-minute intervals)."""
+    vids, starts, lengths = [], [], []
+    base = 0
+    for v, flen in enumerate(video_lengths):
+        off = 0
+        while off < flen:
+            clen = min(chunk_frames, flen - off)
+            vids.append(v)
+            starts.append(base + off)
+            lengths.append(clen)
+            off += clen
+        base += flen
+    lengths_np = np.asarray(lengths, np.int32)
+    pow2 = np.asarray([_next_pow2(l) for l in lengths], np.int32)
+    bits = np.asarray([int(p).bit_length() - 1 for p in pow2], np.int32)
+    rng = np.random.default_rng(seed)
+    rotation = rng.integers(0, np.maximum(lengths_np, 1), dtype=np.int64).astype(np.int32)
+    return ChunkIndex(
+        video_id=jnp.asarray(vids, jnp.int32),
+        start=jnp.asarray(starts, jnp.int32),
+        length=jnp.asarray(lengths_np),
+        pow2=jnp.asarray(pow2),
+        bits=jnp.asarray(bits),
+        rotation=jnp.asarray(rotation),
+    )
+
+
+def randomplus_offset(index: ChunkIndex, chunk: jax.Array, k: jax.Array) -> jax.Array:
+    """Frame offset (within the chunk) of the k-th random+ sample.
+
+    ``bit_reverse(k mod pow2)`` enumerates [0, pow2) in stratified order;
+    non-power-of-two lengths are handled by rescaling the stratified value
+    into [0, length) — this preserves the low-discrepancy property (it is
+    the radical-inverse van der Corput point scaled to the domain) and never
+    indexes out of range.  A per-chunk rotation decorrelates chunks.
+    """
+    chunk = jnp.asarray(chunk, jnp.int32)
+    length = index.length[chunk]
+    pow2 = jnp.maximum(index.pow2[chunk], 1)
+    bits = index.bits[chunk]
+    rot = index.rotation[chunk]
+    raw = jnp.asarray(k, jnp.int32) % pow2
+    cand = bit_reverse(raw, bits)
+    # rescale the stratified value into [0, length) in f32 (exact enough for
+    # sampling; clamped so we never index out of range; avoids i64)
+    frac = cand.astype(jnp.float32) / pow2.astype(jnp.float32)
+    offset = jnp.minimum(
+        jnp.floor(frac * length.astype(jnp.float32)).astype(jnp.int32),
+        length - 1,
+    )
+    return (offset + rot) % jnp.maximum(length, 1)
+
+
+def randomplus_frame(index: ChunkIndex, chunk: jax.Array, k: jax.Array) -> jax.Array:
+    """Global frame id of the k-th random+ sample from ``chunk``
+    (Algorithm 1 line 9 with the §3.7.2 within-chunk sampler)."""
+    return index.start[chunk] + randomplus_offset(index, chunk, k)
+
+
+def global_randomplus_order(total_frames: int, *, seed: int = 0) -> np.ndarray:
+    """random+ over the *whole* dataset (the paper's strongest non-adaptive
+    baseline): a bit-reversal permutation of [0, total) with random rotation.
+
+    Host-side (numpy) — used by baseline drivers and benchmarks.
+    """
+    pow2 = _next_pow2(total_frames)
+    bits = int(pow2).bit_length() - 1
+    idx = np.arange(pow2, dtype=np.uint64)
+    rev = np.zeros(pow2, dtype=np.uint64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    rev = rev[rev < total_frames].astype(np.int64)
+    rng = np.random.default_rng(seed)
+    rot = int(rng.integers(0, max(total_frames, 1)))
+    return ((rev + rot) % total_frames).astype(np.int64)

@@ -1,0 +1,149 @@
+"""Distributed ExSample runtime (paper §3.7.1 extended to multi-pod).
+
+The paper observes all sampler updates are additive/commutative and sketches
+an asynchronous distributed execution.  This module realizes it on a JAX
+mesh:
+
+  * chunk statistics are sharded over the ``data`` axis (and replicated over
+    ``model`` / ``pod``) — each data shard owns M/|data| chunks;
+  * cohort selection runs under ``shard_map``: every shard Thompson-samples
+    its local chunks, then the *global* top cohort indices are recovered with
+    an all-gather of per-shard (score, index) winners — collective volume is
+    O(cohorts × |data|) scalars, negligible next to detector compute;
+  * workers accumulate *delta* statistics locally and merge them with a
+    `psum` every ``sync_every`` rounds ("eventual-consistency Thompson") —
+    staleness only widens the posterior noise, which Thompson tolerates; the
+    merge schedule is the straggler-mitigation lever: a late worker's delta
+    joins whenever it lands, nobody barriers inside a round.
+
+These functions are written against an abstract mesh so the same code runs
+on the 2-device test mesh and the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.state import SamplerState
+from repro.core.thompson import gamma_params, wilson_hilferty
+
+
+def shard_sampler_state(state: SamplerState, mesh: Mesh, axis: str = "data"):
+    """Place chunk-stat arrays sharded over ``axis`` (M must divide evenly;
+    pad_chunks() handles ragged M)."""
+    sh = NamedSharding(mesh, P(axis))
+    return jax.tree.map(
+        lambda x: jax.device_put(x, sh) if x.ndim == 1 else x, state
+    )
+
+
+def pad_chunks(state: SamplerState, multiple: int) -> SamplerState:
+    """Pad chunk arrays to a multiple of the shard count with exhausted
+    dummy chunks (frames=0 ⇒ never selected)."""
+    m = state.num_chunks
+    pad = (-m) % multiple
+    if pad == 0:
+        return state
+    import dataclasses as _dc
+
+    f = lambda x, fill: jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return _dc.replace(
+        state,
+        n1=f(state.n1, 0),
+        n=f(state.n, 1),       # n>0, frames=0 ⇒ exhausted
+        frames=f(state.frames, 0),
+    )
+
+
+@partial(jax.jit, static_argnames=("cohorts", "axis", "mesh"))
+def distributed_choose(
+    key: jax.Array,
+    state: SamplerState,
+    *,
+    mesh: Mesh,
+    cohorts: int,
+    axis: str = "data",
+) -> jax.Array:
+    """Globally-consistent batched Thompson choice over sharded stats.
+
+    Every shard draws WH-approximate gamma scores for its local chunks and
+    reduces to its per-cohort local winner; winners are all-gathered and the
+    global argmax is computed redundantly on all shards (deterministic).
+    Returns replicated i32[cohorts] of *global* chunk ids.
+    """
+    num_shards = mesh.shape[axis]
+    m = state.num_chunks
+    assert m % num_shards == 0, "call pad_chunks() first"
+    local_m = m // num_shards
+
+    alpha, beta = gamma_params(state)
+    exhausted = state.exhausted()
+
+    def local_choice(key, alpha_l, beta_l, exhausted_l):
+        shard_id = jax.lax.axis_index(axis)
+        # decorrelate shards; fold_in is cheap and deterministic
+        k = jax.random.fold_in(key, shard_id)
+        z = jax.random.normal(k, (cohorts, alpha_l.shape[0]), alpha_l.dtype)
+        scores = wilson_hilferty(alpha_l[None, :], z) / beta_l[None, :]
+        scores = jnp.where(exhausted_l[None, :], -jnp.inf, scores)
+        local_best = jnp.argmax(scores, axis=-1)                    # [C]
+        local_score = jnp.take_along_axis(
+            scores, local_best[:, None], axis=-1
+        )[:, 0]                                                     # [C]
+        global_idx = shard_id * local_m + local_best
+        # gather winners from every shard: [shards, C]
+        all_scores = jax.lax.all_gather(local_score, axis)
+        all_idx = jax.lax.all_gather(global_idx, axis)
+        win = jnp.argmax(all_scores, axis=0)                        # [C]
+        return jnp.take_along_axis(all_idx, win[None, :], axis=0)[0].astype(
+            jnp.int32
+        )
+
+    specs = P(axis)
+    from jax.experimental.shard_map import shard_map
+
+    choice = shard_map(
+        local_choice,
+        mesh=mesh,
+        in_specs=(P(), specs, specs, specs),
+        out_specs=P(),
+        check_rep=False,
+    )(key, alpha, beta, exhausted)
+    return choice
+
+
+@jax.jit
+def merge_deltas(
+    state: SamplerState, delta_n1: jax.Array, delta_n: jax.Array
+) -> SamplerState:
+    """Merge per-worker delta statistics into the state.
+
+    ``delta_*`` are stacked per-worker updates ``[W, M]`` (or a single
+    ``[M]`` delta).  Additivity makes the merge exact regardless of
+    interleaving — the §3.7.1 argument.  On a multi-controller deployment
+    the identical reduction is one ``psum`` over the ``data`` axis of each
+    process's local delta buffer (shard_map with replicated specs); in the
+    single-controller runtime the workers' buffers arrive stacked, so the
+    merge is a plain sum over the worker axis — same semantics, no
+    collective theater.
+    """
+    import dataclasses as _dc
+
+    d1 = jnp.atleast_2d(delta_n1).sum(axis=0)
+    dn = jnp.atleast_2d(delta_n).sum(axis=0)
+    return _dc.replace(state, n1=state.n1 + d1, n=state.n + dn)
+
+
+def straggler_robust_rounds(
+    worker_latencies: jnp.ndarray, sync_every: int, round_time: float
+) -> jnp.ndarray:
+    """Analytic model used by tests/benchmarks: with barrier-per-round, the
+    round time is max(latencies); with commutative async merge the effective
+    round time is mean(latencies) + sync cost amortized over sync_every.
+    Returns (barrier_time, async_time) per round."""
+    barrier = jnp.max(worker_latencies)
+    async_ = jnp.mean(worker_latencies) + round_time / max(sync_every, 1)
+    return jnp.stack([barrier, async_])

@@ -1,0 +1,179 @@
+"""ExSample Algorithm 1 — single-step, batched-cohort and scanned drivers.
+
+The loop is expressed as a pure step function over an ``ExSampleCarry``
+pytree so it can be (a) jitted and scanned for simulation-scale benchmarks,
+(b) driven frame-by-frame from the host around a real serving stack, and
+(c) sharded (see ``repro.core.distributed``).
+
+Detector plug-in protocol:  ``detector(key, frame_id) -> Detections``
+(see ``repro.sim.oracle.Detections``).  The oracle/noisy/neural detectors
+all satisfy it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import TYPE_CHECKING, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import thompson
+from repro.core.chunks import ChunkIndex, randomplus_frame
+from repro.core.matcher import MatcherState, match_and_update
+from repro.core.state import (
+    SamplerState,
+    apply_cross_chunk_decrement,
+    apply_update,
+)
+
+if TYPE_CHECKING:  # avoid core ↔ sim import cycle; Detections is a pytree
+    from repro.sim.oracle import Detections
+
+DetectorFn = Callable[[jax.Array, jax.Array], "Detections"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ExSampleCarry:
+    sampler: SamplerState
+    matcher: MatcherState
+    key: jax.Array
+    step: jax.Array            # i32[] — total frames processed
+    results: jax.Array         # i32[] — distinct results found so far
+
+
+def init_carry(
+    sampler: SamplerState, matcher: MatcherState, key: jax.Array
+) -> ExSampleCarry:
+    return ExSampleCarry(
+        sampler=sampler,
+        matcher=matcher,
+        key=key,
+        step=jnp.zeros((), jnp.int32),
+        results=jnp.zeros((), jnp.int32),
+    )
+
+
+def _process_frame(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    detector: DetectorFn,
+    chunk_id: jax.Array,
+    det_key: jax.Array,
+) -> ExSampleCarry:
+    """Algorithm 1 lines 9-16 for one frame of ``chunk_id``."""
+    # line 9: within-chunk random+ sample; the per-chunk counter n doubles
+    # as the low-discrepancy rank so no extra state is needed.
+    rank = carry.sampler.n[chunk_id].astype(jnp.int32)
+    frame_id = randomplus_frame(chunks, chunk_id, rank)
+    video_id = chunks.video_id[chunk_id]
+
+    # lines 10-11: io + decode + detect (the expensive part)
+    dets = detector(det_key, frame_id)
+
+    # line 12: matcher
+    m = match_and_update(
+        carry.matcher,
+        dets.boxes,
+        dets.feats,
+        dets.valid,
+        video_id,
+        frame_id,
+        chunk_id,
+    )
+
+    # lines 13-14: state update.  §3.4: matches whose first sighting lives in
+    # a different chunk decrement *that* chunk's N¹, not this one's.
+    d1_local = m.d1 - m.cross_chunk
+    sampler = apply_update(carry.sampler, chunk_id, m.d0, d1_local)
+    valid_home = m.cross_home >= 0
+    sampler = apply_cross_chunk_decrement(
+        sampler,
+        jnp.where(valid_home, m.cross_home, 0),
+        valid_home.astype(sampler.n1.dtype),
+    )
+    return dataclasses.replace(
+        carry,
+        sampler=sampler,
+        matcher=m.new_state,
+        step=carry.step + 1,
+        results=carry.results + m.d0,
+    )
+
+
+@partial(jax.jit, static_argnames=("detector", "method"))
+def exsample_step(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    method: str = "exact",
+) -> ExSampleCarry:
+    """One full iteration of Algorithm 1 (choose → process → update)."""
+    key, k_choice, k_det = jax.random.split(carry.key, 3)
+    carry = dataclasses.replace(carry, key=key)
+    chunk_id = thompson.choose_chunks(
+        k_choice, carry.sampler, cohorts=1, method=method
+    )[0]
+    return _process_frame(carry, chunks, detector, chunk_id, k_det)
+
+
+@partial(jax.jit, static_argnames=("detector", "cohorts", "method"))
+def exsample_batch_step(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    cohorts: int,
+    method: str = "exact",
+) -> ExSampleCarry:
+    """§3.7.1 batched execution: B Thompson cohorts pick B frames which are
+    processed as one device batch; statistics update once at the end
+    (additive, order-independent).
+
+    The matcher update is inherently sequential in its ring buffer, so the
+    B frames' detections are folded with ``lax.fori_loop`` — the expensive
+    detector work is still batched, matching the paper's GPU batching story.
+    """
+    key, k_choice, k_det = jax.random.split(carry.key, 3)
+    carry = dataclasses.replace(carry, key=key)
+    chunk_ids = thompson.choose_chunks(
+        k_choice, carry.sampler, cohorts=cohorts, method=method
+    )
+    det_keys = jax.random.split(k_det, cohorts)
+
+    def body(i, c):
+        return _process_frame(c, chunks, detector, chunk_ids[i], det_keys[i])
+
+    return jax.lax.fori_loop(0, cohorts, body, carry)
+
+
+def run_search(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    result_limit: int,
+    max_steps: int,
+    cohorts: int = 1,
+    method: str = "exact",
+    trace_every: int = 0,
+):
+    """Host driver: iterate until ``result_limit`` distinct results or
+    ``max_steps`` frames.  Returns (final_carry, trace) where trace is a
+    list of (frames_processed, results) checkpoints for recall curves."""
+    trace = []
+    step_fn = (
+        partial(exsample_step, detector=detector, method=method)
+        if cohorts == 1
+        else partial(
+            exsample_batch_step, detector=detector, cohorts=cohorts, method=method
+        )
+    )
+    while int(carry.results) < result_limit and int(carry.step) < max_steps:
+        carry = step_fn(carry, chunks)
+        if trace_every and int(carry.step) % trace_every == 0:
+            trace.append((int(carry.step), int(carry.results)))
+    trace.append((int(carry.step), int(carry.results)))
+    return carry, trace

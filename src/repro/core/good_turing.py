@@ -1,0 +1,113 @@
+"""Good-Turing machinery from paper §3.1 and §3.3.
+
+Implements the estimator, its bias bounds (Theorem *Bias*), the variance
+bound (Theorem *Variance*), and the Poisson characterization of N¹(n) —
+both as analysis utilities and as invariants exercised by the property
+tests (``tests/test_good_turing.py``).
+
+Everything here is pure jnp and differentiable where meaningful.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def estimator(n1: jax.Array, n: jax.Array) -> jax.Array:
+    """R(n+1) ≈ N¹(n)/n   (Eq. 1 / Eq. 7)."""
+    return n1 / jnp.maximum(n, 1.0)
+
+
+def pi_first_at(p: jax.Array, n: jax.Array) -> jax.Array:
+    """π_i(n) = p_i (1-p_i)^(n-1): chance result i appears first at sample n."""
+    return p * (1.0 - p) ** (n - 1.0)
+
+
+def expected_new(p: jax.Array, n: jax.Array) -> jax.Array:
+    """E[R(n+1)] = Σ_i p_i (1-p_i)^n  — expected new results on sample n+1."""
+    return jnp.sum(p * (1.0 - p) ** n)
+
+
+def expected_n1(p: jax.Array, n: jax.Array) -> jax.Array:
+    """E[N¹(n)] = n Σ_i π_i(n) = n Σ_i p_i (1-p_i)^(n-1)."""
+    return n * jnp.sum(pi_first_at(p, n))
+
+
+def expected_estimate(p: jax.Array, n: jax.Array) -> jax.Array:
+    """E[N¹(n)]/n = Σ_i π_i(n)."""
+    return jnp.sum(pi_first_at(p, n))
+
+
+class BiasBounds(NamedTuple):
+    """rel.err bounds of Theorem (Bias): 0 ≤ rel.err ≤ min(max_p, sqrtN_term)."""
+
+    rel_err: jax.Array        # exact relative bias (needs ground-truth p)
+    max_p_bound: jax.Array    # Eq. 3:  max_i p_i
+    moment_bound: jax.Array   # Eq. 4:  sqrt(N) (mu_p + sigma_p)
+
+
+def bias_bounds(p: jax.Array, n: jax.Array) -> BiasBounds:
+    """Evaluate the exact relative bias and both paper bounds.
+
+    rel.err = (E[N¹(n)]/n − E[R(n+1)]) / (E[N¹(n)]/n)
+    """
+    est = expected_estimate(p, n)
+    truth = expected_new(p, n)
+    rel_err = (est - truth) / jnp.maximum(est, jnp.finfo(est.dtype).tiny)
+    num_results = jnp.asarray(p.shape[0], p.dtype)
+    mu = jnp.mean(p)
+    sigma = jnp.std(p)
+    return BiasBounds(
+        rel_err=rel_err,
+        max_p_bound=jnp.max(p),
+        moment_bound=jnp.sqrt(num_results) * (mu + sigma),
+    )
+
+
+def variance_bound(p: jax.Array, n: jax.Array) -> jax.Array:
+    """Theorem (Variance): Var[N¹(n)/n] ≤ E[N¹(n)]/n²  (under independence)."""
+    return expected_n1(p, n) / jnp.maximum(n, 1.0) ** 2
+
+
+def exact_variance(p: jax.Array, n: jax.Array) -> jax.Array:
+    """Exact Var[N¹(n)/n] under independent Bernoulli instances:
+    Σ_i π_i(n)(1−π_i(n)) / n²."""
+    pi = pi_first_at(p, n)
+    return jnp.sum(pi * (1.0 - pi)) / jnp.maximum(n, 1.0) ** 2
+
+
+def poisson_rate(p: jax.Array, n: jax.Array) -> jax.Array:
+    """λ of the limiting Poisson law of N¹(n):  λ = E[N¹(n)] = n·Σ_i π_i(n).
+
+    (The paper's §3.3 proof uses π_i to mean n·p_i(1-p_i)^{n-1} — the
+    probability instance i was seen *exactly once in n draws* — while its
+    Appendix A defines π_i without the n factor; the Poisson parameter is
+    the exactly-once total, i.e. E[N¹].)
+    """
+    return n * jnp.sum(pi_first_at(p, n))
+
+
+def simulate_counts(
+    key: jax.Array, p: jax.Array, num_samples: int
+) -> tuple[jax.Array, jax.Array]:
+    """Monte-Carlo draw of (N¹(n), seen-set size) after ``num_samples``
+    random frames, used by the §3.3.2-style validation benchmarks.
+
+    Each frame shows instance i independently with probability p_i.  Returns
+    (times_seen i32[N], n).  Runs as one vectorized binomial draw per
+    instance — statistically identical to the frame-by-frame loop because
+    per-frame occupancy draws are i.i.d. across frames.
+    """
+    times_seen = jax.random.binomial(key, num_samples, p).astype(jnp.int32)
+    return times_seen, jnp.asarray(num_samples, jnp.int32)
+
+
+def n1_from_counts(times_seen: jax.Array) -> jax.Array:
+    return jnp.sum(times_seen == 1).astype(jnp.float32)
+
+
+def remaining_value(p: jax.Array, times_seen: jax.Array) -> jax.Array:
+    """True R(n+1) = Σ_i [i ∉ seen] p_i given simulated sighting counts."""
+    return jnp.sum(jnp.where(times_seen == 0, p, 0.0))

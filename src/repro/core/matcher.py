@@ -1,0 +1,188 @@
+"""Detection matcher (paper §2.3, Algorithm 1 line 12).
+
+The matcher decides which detections are *new* results (d₀) and which are
+the *second* sighting of a known result (d₁) — the only two quantities the
+ExSample update consumes.  Production implementation: a fixed-capacity
+result memory of (box, feature, video, frame, times_seen) entries, matched
+by IoU in frame-space plus temporal gating (SORT-style) and optional
+appearance-feature cosine similarity.
+
+Everything is statically shaped so the whole match-update step jits; the
+result memory is a ring buffer of capacity ``max_results``.
+
+The pairwise-IoU inner product is the compute hot spot for crowded scenes
+(D × R box pairs) and is backed by the ``repro.kernels.iou_match`` Pallas
+kernel; the pure-jnp path here doubles as its reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e9
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MatcherState:
+    """Ring-buffer result memory (capacity R)."""
+
+    boxes: jax.Array        # f32[R, 4]  — (x0, y0, x1, y1) of first sighting
+    feats: jax.Array        # f32[R, F]  — appearance feature of first sighting
+    video: jax.Array        # i32[R]     — video id of first sighting
+    frame: jax.Array        # i32[R]     — global frame id of first sighting
+    chunk: jax.Array        # i32[R]     — chunk of first sighting (§3.4)
+    times_seen: jax.Array   # i32[R]     — 0 = empty slot
+    cursor: jax.Array       # i32[]      — ring insert position
+    iou_thresh: float = dataclasses.field(metadata=dict(static=True), default=0.5)
+    time_gate: int = dataclasses.field(metadata=dict(static=True), default=900)
+    feat_thresh: float = dataclasses.field(metadata=dict(static=True), default=-1.0)
+
+    @property
+    def capacity(self) -> int:
+        return self.boxes.shape[0]
+
+
+def init_matcher(
+    *,
+    max_results: int,
+    feat_dim: int = 8,
+    iou_thresh: float = 0.5,
+    time_gate: int = 900,
+    feat_thresh: float = -1.0,
+) -> MatcherState:
+    return MatcherState(
+        boxes=jnp.zeros((max_results, 4), jnp.float32),
+        feats=jnp.zeros((max_results, feat_dim), jnp.float32),
+        video=jnp.full((max_results,), -1, jnp.int32),
+        frame=jnp.full((max_results,), -(10**9), jnp.int32),
+        chunk=jnp.full((max_results,), -1, jnp.int32),
+        times_seen=jnp.zeros((max_results,), jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+        iou_thresh=iou_thresh,
+        time_gate=time_gate,
+        feat_thresh=feat_thresh,
+    )
+
+
+def pairwise_iou(a: jax.Array, b: jax.Array) -> jax.Array:
+    """IoU matrix f32[D, R] for boxes a f32[D,4], b f32[R,4] (x0,y0,x1,y1)."""
+    area_a = jnp.maximum(a[:, 2] - a[:, 0], 0.0) * jnp.maximum(a[:, 3] - a[:, 1], 0.0)
+    area_b = jnp.maximum(b[:, 2] - b[:, 0], 0.0) * jnp.maximum(b[:, 3] - b[:, 1], 0.0)
+    lt = jnp.maximum(a[:, None, :2], b[None, :, :2])
+    rb = jnp.minimum(a[:, None, 2:], b[None, :, 2:])
+    wh = jnp.maximum(rb - lt, 0.0)
+    inter = wh[..., 0] * wh[..., 1]
+    union = area_a[:, None] + area_b[None, :] - inter
+    return inter / jnp.maximum(union, 1e-9)
+
+
+class MatchResult(NamedTuple):
+    d0: jax.Array           # i32[] — detections matching nothing (new results)
+    d1: jax.Array           # i32[] — results transitioning seen-once → seen-twice
+    cross_chunk: jax.Array  # i32[] — of d1, how many were first seen elsewhere (§3.4)
+    cross_home: jax.Array   # i32[R_pad] — home chunks to decrement (padded, -1 = none)
+    is_new: jax.Array       # bool[D] — per-detection novelty flag
+    new_state: "MatcherState"
+
+
+def match_and_update(
+    state: MatcherState,
+    boxes: jax.Array,       # f32[D, 4]
+    feats: jax.Array,       # f32[D, F]
+    valid: jax.Array,       # bool[D] — detector emits fixed D slots, some invalid
+    video_id: jax.Array,    # i32[]
+    frame_id: jax.Array,    # i32[]
+    chunk_id: jax.Array,    # i32[]
+) -> MatchResult:
+    """Match one frame's detections against the result memory and update it.
+
+    Semantics (statically shaped, single frame):
+      - a detection *matches* memory entry r iff same video, |Δframe| ≤
+        time_gate, IoU ≥ iou_thresh, and (optionally) feature cosine ≥
+        feat_thresh.  Ties go to the highest IoU entry.
+      - unmatched valid detections are new results → inserted (times_seen=1).
+      - matched detections bump times_seen of their entry;  d₁ counts
+        entries whose times_seen went exactly 1 → 2 this frame.
+    """
+    occupied = state.times_seen > 0
+    iou = pairwise_iou(boxes, state.boxes)
+    same_video = state.video[None, :] == video_id
+    in_gate = jnp.abs(state.frame[None, :] - frame_id) <= state.time_gate
+    match_ok = iou >= state.iou_thresh
+    score_val = iou
+    if state.feat_thresh > -1.0:
+        # appearance re-identification: long-range duplicates (an object
+        # re-seen after drifting across the frame, or across chunks §3.4)
+        # can't match by IoU — cosine similarity substitutes for overlap,
+        # the role the paper's tracker-based matcher plays.
+        an = feats / jnp.maximum(jnp.linalg.norm(feats, axis=-1, keepdims=True), 1e-9)
+        bn = state.feats / jnp.maximum(
+            jnp.linalg.norm(state.feats, axis=-1, keepdims=True), 1e-9
+        )
+        sim = an @ bn.T
+        match_ok = match_ok | (sim >= state.feat_thresh)
+        score_val = jnp.maximum(iou, sim)
+    eligible = occupied[None, :] & same_video & in_gate & match_ok
+    scores = jnp.where(eligible, score_val, NEG)
+
+    best = jnp.argmax(scores, axis=-1)                       # i32[D]
+    has_match = jnp.take_along_axis(scores, best[:, None], axis=-1)[:, 0] > NEG / 2
+    has_match = has_match & valid
+    is_new = valid & ~has_match
+
+    # --- bump times_seen for matched entries (scatter-add over entries) ---
+    bump = jnp.zeros((state.capacity,), jnp.int32).at[best].add(
+        has_match.astype(jnp.int32)
+    )
+    new_seen = state.times_seen + jnp.where(occupied, bump, 0)
+    went_twice = occupied & (state.times_seen == 1) & (new_seen >= 2)
+    d1 = jnp.sum(went_twice).astype(jnp.int32)
+    # §3.4 cross-chunk: entry first seen in another chunk ⇒ its home chunk's
+    # N¹ must be decremented instead of this one's.
+    crossed = went_twice & (state.chunk != chunk_id)
+    cross_chunk = jnp.sum(crossed).astype(jnp.int32)
+    cross_home = jnp.where(crossed, state.chunk, -1)
+
+    # --- insert new results into ring buffer slots ---
+    d0 = jnp.sum(is_new).astype(jnp.int32)
+    num_new = d0
+    # Target slots: cursor, cursor+1, ... (ring).  Build per-detection slot
+    # ids via exclusive cumsum over is_new.
+    order = jnp.cumsum(is_new.astype(jnp.int32)) - is_new.astype(jnp.int32)
+    slot = (state.cursor + order) % state.capacity
+    slot = jnp.where(is_new, slot, state.capacity)  # dump non-new to OOB pad
+    pad = lambda arr, fill: jnp.concatenate([arr, jnp.full((1,) + arr.shape[1:], fill, arr.dtype)], 0)
+
+    boxes_mem = pad(state.boxes, 0.0).at[slot].set(boxes)[:-1]
+    feats_mem = pad(state.feats, 0.0).at[slot].set(feats)[:-1]
+    video_mem = pad(state.video, -1).at[slot].set(jnp.broadcast_to(video_id, slot.shape))[:-1]
+    frame_mem = pad(state.frame, 0).at[slot].set(jnp.broadcast_to(frame_id, slot.shape))[:-1]
+    chunk_mem = pad(state.chunk, -1).at[slot].set(jnp.broadcast_to(chunk_id, slot.shape))[:-1]
+    seen_mem = pad(new_seen, 0).at[slot].set(1)[:-1]
+
+    new_state = dataclasses.replace(
+        state,
+        boxes=boxes_mem,
+        feats=feats_mem,
+        video=video_mem,
+        frame=frame_mem,
+        chunk=chunk_mem,
+        times_seen=seen_mem,
+        cursor=(state.cursor + num_new) % state.capacity,
+    )
+    return MatchResult(
+        d0=d0,
+        d1=d1,
+        cross_chunk=cross_chunk,
+        cross_home=cross_home,
+        is_new=is_new,
+        new_state=new_state,
+    )
+
+
+def num_results(state: MatcherState) -> jax.Array:
+    return jnp.sum(state.times_seen > 0).astype(jnp.int32)

@@ -1,0 +1,193 @@
+"""Asynchronous search runtime — the production service around Algorithm 1.
+
+The paper sketches asynchronous distributed execution (§3.7.1: "workers
+processing a batch of frames at a time without waiting for other workers…
+all updates are commutative").  This module is that sketch made concrete:
+
+  * a driver owns the sampler/matcher state and a cohort queue;
+  * N workers pull cohorts, "process" them (detector batch — here a
+    callable; on a pod, a `serve_step` invocation), and push delta
+    statistics back whenever they finish — no barriers;
+  * the driver merges deltas commutatively (`merge_deltas`), re-samples
+    new cohorts from the freshest state, monitors worker health
+    (`HeartbeatMonitor`) and re-issues cohorts from dead/straggling
+    workers (at-most-once *effect*: a duplicated frame perturbs one
+    sample, which the estimator tolerates — DESIGN.md §5).
+
+The runtime is deterministic under a virtual clock for testing; the
+worker pool is threads (the detector releases the GIL under jax) — on a
+real deployment each worker is a pod client.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunks import ChunkIndex, randomplus_frame
+from repro.core.distributed import merge_deltas
+from repro.core.exsample import ExSampleCarry, _process_frame
+from repro.core.state import SamplerState
+from repro.core.thompson import choose_chunks
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+
+@dataclasses.dataclass
+class Cohort:
+    cohort_id: int
+    chunk_ids: np.ndarray      # i64[B]
+    issue_count: int = 0       # >1 ⇒ re-issued (straggler/death)
+
+
+@dataclasses.dataclass
+class WorkerResult:
+    cohort_id: int
+    worker_id: int
+    delta_n1: jax.Array
+    delta_n: jax.Array
+    new_results: int
+    frames: int
+
+
+class AsyncSearchDriver:
+    """Cohort scheduler + state owner.  Thread-safe, barrier-free."""
+
+    def __init__(
+        self,
+        carry: ExSampleCarry,
+        chunks: ChunkIndex,
+        detector: Callable,
+        *,
+        cohort_size: int = 8,
+        num_workers: int = 4,
+        result_limit: int = 50,
+        max_frames: int = 100_000,
+        straggler_factor: float = 4.0,
+    ):
+        self.carry = carry
+        self.chunks = chunks
+        self.detector = detector
+        self.cohort_size = cohort_size
+        self.result_limit = result_limit
+        self.max_frames = max_frames
+        self.monitor = HeartbeatMonitor(straggler_factor=straggler_factor)
+        self._lock = threading.Lock()
+        self._work: "queue.Queue[Optional[Cohort]]" = queue.Queue()
+        self._results: "queue.Queue[WorkerResult]" = queue.Queue()
+        self._next_cohort = 0
+        self._inflight: dict[int, Cohort] = {}
+        self.num_workers = num_workers
+        self.stats = {"cohorts": 0, "reissues": 0, "merges": 0}
+
+    # ---- driver side -------------------------------------------------------
+
+    def _issue_cohort(self) -> None:
+        with self._lock:
+            key = jax.random.fold_in(self.carry.key, self._next_cohort)
+            chunk_ids = np.asarray(
+                choose_chunks(key, self.carry.sampler, cohorts=self.cohort_size)
+            )
+            cohort = Cohort(self._next_cohort, chunk_ids)
+            self._next_cohort += 1
+            self._inflight[cohort.cohort_id] = cohort
+            self.stats["cohorts"] += 1
+        self._work.put(cohort)
+
+    def _merge(self, res: WorkerResult) -> None:
+        with self._lock:
+            self._inflight.pop(res.cohort_id, None)
+            sampler = merge_deltas(self.carry.sampler, res.delta_n1, res.delta_n)
+            self.carry = dataclasses.replace(
+                self.carry,
+                sampler=sampler,
+                step=self.carry.step + res.frames,
+                results=self.carry.results + res.new_results,
+            )
+            self.stats["merges"] += 1
+
+    def _reissue(self, cohort_id: int) -> None:
+        with self._lock:
+            cohort = self._inflight.get(cohort_id)
+            if cohort is None:
+                return
+            cohort.issue_count += 1
+            self.stats["reissues"] += 1
+        self._work.put(cohort)
+
+    # ---- worker side -------------------------------------------------------
+
+    def _worker(self, wid: int) -> None:
+        self.monitor.register(wid, now=time.monotonic())
+        while True:
+            cohort = self._work.get()
+            if cohort is None:
+                return
+            self.monitor.assign(wid, cohort.cohort_id)
+            t0 = time.monotonic()
+            # local carry: matcher access is serialized through the driver's
+            # carry; workers compute detector results + per-chunk deltas.
+            with self._lock:
+                local = self.carry
+            before = local.sampler
+            for i, c in enumerate(cohort.chunk_ids):
+                local = _process_frame(
+                    local, self.chunks, self.detector, jnp.int32(int(c)),
+                    jax.random.fold_in(
+                        jax.random.PRNGKey(7), cohort.cohort_id * 64 + i
+                    ),
+                )
+            self._results.put(
+                WorkerResult(
+                    cohort_id=cohort.cohort_id,
+                    worker_id=wid,
+                    delta_n1=local.sampler.n1 - before.n1,
+                    delta_n=local.sampler.n - before.n,
+                    new_results=int(local.results - self.carry.results),
+                    frames=len(cohort.chunk_ids),
+                )
+            )
+            # matcher memory travels with the merged carry
+            with self._lock:
+                self.carry = dataclasses.replace(
+                    self.carry, matcher=local.matcher
+                )
+            now = time.monotonic()
+            self.monitor.heartbeat(wid, now)
+            self.monitor.record_completion(wid, now - t0)
+
+    # ---- run loop ----------------------------------------------------------
+
+    def run(self) -> ExSampleCarry:
+        threads = [
+            threading.Thread(target=self._worker, args=(w,), daemon=True)
+            for w in range(self.num_workers)
+        ]
+        for t in threads:
+            t.start()
+        # keep the pipeline full: workers+1 outstanding cohorts
+        for _ in range(self.num_workers + 1):
+            self._issue_cohort()
+        while (
+            int(self.carry.results) < self.result_limit
+            and int(self.carry.step) < self.max_frames
+        ):
+            try:
+                res = self._results.get(timeout=60.0)
+            except queue.Empty:
+                break
+            self._merge(res)
+            actions = self.monitor.sweep(time.monotonic())
+            for cid in actions["reissue_cohorts"]:
+                self._reissue(cid)
+            self._issue_cohort()
+        for _ in threads:
+            self._work.put(None)
+        for t in threads:
+            t.join(timeout=5.0)
+        return self.carry

@@ -1,0 +1,14 @@
+"""Data substrate: frame stores + host pipelines."""
+from repro.data.framestore import FrameStore, SimFrameStore, ShardedFrameStore
+from repro.data.pipeline import (
+    PrefetchPipeline,
+    TrainBatchSpec,
+    DeterministicTokenPipeline,
+    ShuffledFramePipeline,
+)
+
+__all__ = [
+    "FrameStore", "SimFrameStore", "ShardedFrameStore",
+    "PrefetchPipeline", "TrainBatchSpec", "DeterministicTokenPipeline",
+    "ShuffledFramePipeline",
+]

@@ -1,0 +1,88 @@
+"""Frame store: the random-access decode layer (paper §4.1).
+
+The paper re-encodes videos with keyframes every 20 frames (Hwang/Scanner)
+to make random reads cheap.  Our store models exactly that access pattern
+over the synthetic repository: a ``fetch`` returns the frame *embedding*
+(the stand-in for decoded pixels, see ``repro.sim.oracle.frame_embedding``)
+plus an I/O cost in "decode units" = distance to the previous keyframe + 1.
+
+The store is deliberately split from the pipeline so a real deployment can
+swap in an actual video decoder behind the same interface; everything above
+(`pipeline`, `exsample`, `serve`) is agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.oracle import frame_embedding
+from repro.sim.repository import Repository
+
+
+class FrameStore(Protocol):
+    """Interface every frame source implements."""
+
+    def fetch(self, frame_ids: jax.Array) -> jax.Array:
+        """f32[B, ...] frame payloads for i32[B] global frame ids."""
+        ...
+
+    def decode_cost(self, frame_ids: jax.Array) -> jax.Array:
+        """f32[B] decode-unit cost per fetch (for the cost model)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SimFrameStore:
+    """Embedding-backed store over a synthetic repository."""
+
+    repo: Repository
+    embed_dim: int
+    patches: int = 0
+    keyframe_every: int = 20
+
+    def fetch(self, frame_ids: jax.Array) -> jax.Array:
+        fn = lambda f: frame_embedding(
+            self.repo, f, dim=self.embed_dim, patches=self.patches
+        )
+        return jax.vmap(fn)(jnp.atleast_1d(frame_ids))
+
+    def decode_cost(self, frame_ids: jax.Array) -> jax.Array:
+        off = jnp.atleast_1d(frame_ids) % self.keyframe_every
+        return (off + 1).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedFrameStore:
+    """Multi-host wrapper: each host owns a contiguous stripe of frames and
+    fetches only local ids; remote ids resolve to zeros + a mask so callers
+    can all-gather payloads if (rarely) needed.  In the production layout
+    the scheduler routes cohorts to the host owning the frames, so remote
+    fetches never happen on the hot path."""
+
+    inner: SimFrameStore
+    host_id: int
+    num_hosts: int
+
+    def _local(self, frame_ids: jax.Array) -> jax.Array:
+        total = self.inner.repo.total_frames
+        stripe = -(-total // self.num_hosts)
+        lo = self.host_id * stripe
+        return (frame_ids >= lo) & (frame_ids < min(lo + stripe, total))
+
+    def fetch(self, frame_ids: jax.Array) -> jax.Array:
+        payload = self.inner.fetch(frame_ids)
+        mask = self._local(jnp.atleast_1d(frame_ids))
+        return payload * mask[(...,) + (None,) * (payload.ndim - 1)]
+
+    def decode_cost(self, frame_ids: jax.Array) -> jax.Array:
+        return self.inner.decode_cost(frame_ids) * self._local(
+            jnp.atleast_1d(frame_ids)
+        )
+
+    def owner_of(self, frame_ids: jax.Array) -> jax.Array:
+        total = self.inner.repo.total_frames
+        stripe = -(-total // self.num_hosts)
+        return (jnp.atleast_1d(frame_ids) // stripe).astype(jnp.int32)

@@ -1,0 +1,1 @@
+"""Distribution substrate: sharding rules, fault tolerance, elastic, compression."""

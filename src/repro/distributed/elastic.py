@@ -1,0 +1,99 @@
+"""Elastic scaling: reshape the mesh without losing state.
+
+All state in this framework is *logically* sharded (PartitionSpecs derived
+from the same schema regardless of mesh), so elasticity is: (1) checkpoint
+(or keep host copies), (2) build the new mesh, (3) re-place every leaf
+with the specs resolved against the new mesh.  Chunk statistics are dense
+1-D arrays → any shard count works after ``pad_chunks``.
+
+Constraints checked here (fail fast rather than mis-shard):
+  * ``model`` axis size must keep dividing all sharded parameter dims;
+  * batch must keep dividing the data-parallel shard count;
+  * pods can join/leave freely (pure DP axis).
+
+``ElasticPlan`` captures a target mesh + the validated transfer plan;
+``apply`` executes it (device_put with new shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingRules, param_shardings
+from repro.models.layers import ParamSpec, Schema
+
+
+def _sharded_dims(schema: Schema, rules: ShardingRules):
+    """Yield (path, dim_size, mesh_axis_size) for every sharded param dim."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    for path, spec in flat:
+        for size, logical in zip(spec.shape, spec.logical):
+            axis = rules.rules.get(logical)
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            n = 1
+            for a in axes:
+                n *= rules.mesh.shape[a]
+            yield "/".join(map(str, path)), size, n
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_mesh: Optional[Mesh]
+    new_mesh: Mesh
+    new_rules: ShardingRules
+    issues: tuple
+
+    @property
+    def feasible(self) -> bool:
+        return not self.issues
+
+
+def plan_resize(
+    schema: Schema,
+    new_mesh: Mesh,
+    *,
+    global_batch: Optional[int] = None,
+    old_mesh: Optional[Mesh] = None,
+) -> ElasticPlan:
+    rules = ShardingRules.for_mesh(new_mesh)
+    issues = []
+    for path, dim, shards in _sharded_dims(schema, rules):
+        if dim % shards:
+            issues.append(
+                f"param {path}: dim {dim} not divisible by {shards} shards"
+            )
+    if global_batch is not None and global_batch % rules.dp_shards:
+        issues.append(
+            f"global_batch {global_batch} not divisible by dp={rules.dp_shards}"
+        )
+    return ElasticPlan(
+        old_mesh=old_mesh, new_mesh=new_mesh, new_rules=rules, issues=tuple(issues)
+    )
+
+
+def apply_resize(plan: ElasticPlan, schema: Schema, params) -> object:
+    """Re-place params under the new mesh (host-mediated; on a real cluster
+    this happens via checkpoint restore on the surviving nodes)."""
+    if not plan.feasible:
+        raise ValueError(f"infeasible elastic plan: {plan.issues}")
+    shardings = param_shardings(schema, plan.new_rules)
+    host = jax.tree.map(np.asarray, params)
+    return jax.tree.map(jax.device_put, host, shardings)
+
+
+def resize_chunk_stats(n1, n, frames, new_shards: int):
+    """Pad + re-place ExSample chunk statistics for a new shard count."""
+    import jax.numpy as jnp
+
+    m = n1.shape[0]
+    pad = (-m) % new_shards
+    f = lambda x, fill: jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return f(n1, 0), f(n, 1), f(frames, 0)

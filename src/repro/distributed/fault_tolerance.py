@@ -1,0 +1,127 @@
+"""Fault tolerance: failure detection, restart policy, straggler tracking.
+
+What "fault tolerant" means for this system at 1000+ nodes:
+
+  1. **State is always reconstructible**: model params + optimizer +
+     ExSample sampler/matcher state + pipeline cursors checkpoint
+     atomically (``repro.train.checkpoint``); PRNG keys are derived from
+     step counters, never stored device-only.  Restart = restore + replay
+     from the cursor.  (Tested in ``tests/test_fault_tolerance.py``.)
+  2. **Failures are detected, not assumed away**: ``HeartbeatMonitor``
+     tracks per-worker liveness from the driver; a missed deadline marks
+     the worker dead and triggers ``ElasticPlan`` (repro.distributed
+     .elastic) to drop to a smaller mesh at the next checkpoint boundary.
+  3. **Stragglers don't stall sampling**: ExSample cohorts merge
+     commutatively (§3.7.1) so slow workers are absorbed — the policy
+     here just decides when a straggler is slow enough to re-issue its
+     cohort elsewhere (work stealing with at-most-once *effect*, since a
+     duplicate frame only perturbs statistics by one sample, which the
+     estimator tolerates — documented deviation from exactly-once).
+
+The monitor is transport-agnostic (timestamps in, decisions out) so the
+unit tests drive it with synthetic clocks; a deployment feeds it real
+heartbeats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class WorkerState(enum.Enum):
+    HEALTHY = "healthy"
+    SUSPECT = "suspect"
+    DEAD = "dead"
+
+
+@dataclasses.dataclass
+class WorkerInfo:
+    last_heartbeat: float
+    state: WorkerState = WorkerState.HEALTHY
+    inflight_cohort: Optional[int] = None
+    completed: int = 0
+    ema_latency: float = 0.0
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Driver-side liveness + straggler detection."""
+
+    suspect_after_s: float = 30.0
+    dead_after_s: float = 120.0
+    straggler_factor: float = 3.0     # × median cohort latency ⇒ re-issue
+    ema: float = 0.9
+
+    def __post_init__(self):
+        self.workers: dict[int, WorkerInfo] = {}
+
+    def register(self, worker: int, now: float) -> None:
+        self.workers[worker] = WorkerInfo(last_heartbeat=now)
+
+    def heartbeat(self, worker: int, now: float) -> None:
+        w = self.workers[worker]
+        w.last_heartbeat = now
+        if w.state is not WorkerState.DEAD:
+            w.state = WorkerState.HEALTHY
+
+    def record_completion(self, worker: int, latency: float) -> None:
+        w = self.workers[worker]
+        w.completed += 1
+        w.inflight_cohort = None
+        w.ema_latency = (
+            latency if w.ema_latency == 0
+            else self.ema * w.ema_latency + (1 - self.ema) * latency
+        )
+
+    def assign(self, worker: int, cohort: int) -> None:
+        self.workers[worker].inflight_cohort = cohort
+
+    def sweep(self, now: float) -> dict:
+        """Advance liveness states; return actions."""
+        dead, suspects, reissue = [], [], []
+        latencies = [w.ema_latency for w in self.workers.values() if w.ema_latency]
+        median = float(np.median(latencies)) if latencies else 0.0
+        for wid, w in self.workers.items():
+            silent = now - w.last_heartbeat
+            if silent >= self.dead_after_s and w.state is not WorkerState.DEAD:
+                w.state = WorkerState.DEAD
+                dead.append(wid)
+                if w.inflight_cohort is not None:
+                    reissue.append(w.inflight_cohort)
+                    w.inflight_cohort = None
+            elif silent >= self.suspect_after_s and w.state is WorkerState.HEALTHY:
+                w.state = WorkerState.SUSPECT
+                suspects.append(wid)
+            # straggler: alive but its inflight cohort is way over budget
+            if (
+                w.state is WorkerState.HEALTHY
+                and w.inflight_cohort is not None
+                and median > 0
+                and w.ema_latency > self.straggler_factor * median
+            ):
+                reissue.append(w.inflight_cohort)
+                w.inflight_cohort = None
+        return {"dead": dead, "suspect": suspects, "reissue_cohorts": reissue}
+
+    @property
+    def healthy_workers(self) -> list[int]:
+        return [
+            wid
+            for wid, w in self.workers.items()
+            if w.state is not WorkerState.DEAD
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class RestartPolicy:
+    """How a run resumes after failure (consumed by launch drivers)."""
+
+    max_restarts: int = 100
+    checkpoint_every_steps: int = 100
+    lose_at_most_steps: int = 100     # == checkpoint_every_steps by default
+
+    def should_restart(self, restart_count: int) -> bool:
+        return restart_count < self.max_restarts

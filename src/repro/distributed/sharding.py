@@ -1,0 +1,130 @@
+"""Logical-axis sharding: one rule table maps schema axes to mesh axes.
+
+``ShardingRules`` resolves the logical axis names used by every ParamSpec
+and activation hint to mesh axes.  Model code never mentions mesh axes —
+it calls ``shard_hint(x, *logical_axes)`` which is a no-op unless a rules
+context is active (so smoke tests on 1 CPU device run the same code).
+
+Activation logical axes:
+  "dp"     — batch / groups           → ("pod", "data") or ("data",)
+  "seq"    — sequence (SP / KV shard) → "model"
+  "heads"  — attention heads          → "model"
+  "mlp"/"inner"/"expert"/"vocab"      → "model"
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamSpec, Schema
+
+_ACTIVE_RULES: contextvars.ContextVar[Optional["ShardingRules"]] = (
+    contextvars.ContextVar("repro_sharding_rules", default=None)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    rules: dict
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, *, fsdp_params: bool = False) -> "ShardingRules":
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+        has_data = "data" in mesh.axis_names
+        table = {
+            "dp": dp,
+            "seq": "model",
+            "heads": "model",
+            "kv": "model",
+            "mlp": "model",
+            "inner": "model",
+            "expert": "model",
+            "expert_ff": "data" if has_data else None,
+            "vocab": "model",
+            # fsdp: weight embed-dims shard over `data`, gathered on use
+            "embed": "data" if (fsdp_params and has_data) else None,
+            None: None,
+        }
+        return ShardingRules(mesh=mesh, rules=table)
+
+    def pspec(self, logical: tuple) -> P:
+        """Resolve logical → mesh axes, dropping duplicate axis uses (a
+        PartitionSpec may bind each mesh axis once; with fsdp enabled
+        e.g. expert w_down carries both expert_ff→data and embed→data —
+        the leftmost binding wins)."""
+        used: set = set()
+        out = []
+        for ax in logical:
+            mesh_ax = self.rules.get(ax, None)
+            flat = (
+                mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            ) if mesh_ax else ()
+            if mesh_ax is None or any(a in used for a in flat):
+                out.append(None)
+            else:
+                used.update(flat)
+                out.append(mesh_ax)
+        return P(*out)
+
+    def sharding(self, logical: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(logical))
+
+    @property
+    def dp_shards(self) -> int:
+        dp = self.rules["dp"]
+        if dp is None:
+            return 1
+        axes = dp if isinstance(dp, tuple) else (dp,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def model_shards(self) -> int:
+        return self.mesh.shape.get("model", 1)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    token = _ACTIVE_RULES.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE_RULES.reset(token)
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _ACTIVE_RULES.get()
+
+
+def shard_hint(x: jax.Array, *logical) -> jax.Array:
+    """Sharding constraint by logical axes; identity without active rules."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(tuple(logical)))
+
+
+def param_pspecs(schema: Schema, rules: ShardingRules):
+    """PartitionSpec tree matching a parameter schema."""
+    return jax.tree.map(
+        lambda s: rules.pspec(s.logical),
+        schema,
+        is_leaf=lambda s: isinstance(s, ParamSpec),
+    )
+
+
+def param_shardings(schema: Schema, rules: ShardingRules):
+    return jax.tree.map(
+        lambda s: rules.sharding(s.logical),
+        schema,
+        is_leaf=lambda s: isinstance(s, ParamSpec),
+    )

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §2).
+
+Each kernel package: ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jit'd wrapper with pure-JAX fallback), ``ref.py``
+(jnp oracle).  Validated in interpret=True mode on CPU; targeted at the
+TPU v5e MXU/VPU.
+"""

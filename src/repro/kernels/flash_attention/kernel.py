@@ -1,0 +1,138 @@
+"""Causal GQA flash-attention forward kernel (prefill / train fwd).
+
+Grid ``(batch·q_heads, num_q_blocks, num_kv_blocks)`` — the last axis is
+innermost-sequential on TPU, so the online-softmax accumulators live in
+VMEM scratch across kv iterations of one (bh, qi) cell.  KV blocks above
+the causal diagonal are skipped with ``pl.when`` (no MXU work issued —
+the TPU analogue of triangular block enumeration).
+
+GQA is handled in the index map: the kv operand block for flattened
+batch·head index ``bh`` is ``(bh // H)·KV + (bh % H) // (H // KV)`` — no
+materialized repeat, so HBM traffic over K/V is O(S·KV·d), not O(S·H·d).
+
+VMEM working set per cell: q (bq·d) + k,v (bk·d each) + scores (bq·bk f32)
++ acc (bq·d f32) ≈ 2.4 MB at bq=bk=256, d=128 — comfortably inside the
+16 MB v5e VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, scale: float, causal: bool, block_q: int, block_kv: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    run = True
+    if causal:
+        # kv block needed iff its first row index ≤ q block's last row index
+        run = kj * block_kv <= qi * block_q + block_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0].astype(jnp.float32)            # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                   # [bq, bk]
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0
+            )
+            cols = kj * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1
+            )
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scratch[...]
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)  # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0] = (acc_scratch[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,            # [B, S, H, d]
+    k: jax.Array,            # [B, T, KV, d]
+    v: jax.Array,            # [B, T, KV, d]
+    *,
+    causal: bool = True,
+    block_q: int = 256,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    bq = min(block_q, s)
+    bk = min(block_kv, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    scale = 1.0 / math.sqrt(d)
+
+    # flatten (B, H) → grid rows; move head axis out for blocked indexing
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, t, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, t, d)
+
+    def kv_index(bh, qi, kj):
+        return ((bh // h) * kv + (bh % h) // group, kj, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fwd_kernel, scale=scale, causal=causal,
+            block_q=bq, block_kv=bk,
+        ),
+        grid=(b * h, s // bq, t // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Dispatching wrapper: Pallas kernel on TPU, blocked-jnp fallback elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+              block_kv: int = 256, interpret: bool | None = None):
+    """Flash attention with automatic backend dispatch.
+
+    interpret=None ⇒ kernel on TPU, reference elsewhere;
+    interpret=True ⇒ kernel body interpreted (CPU validation path).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        if not on_tpu:
+            return attention_ref(q, k, v, causal=causal)
+        interpret = False
+    return flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=interpret,
+    )

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q [B,S,H,d]; k,v [B,T,KV,d] → [B,S,H,d] (f32 math, q.dtype out)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,110 @@
+"""Split-K flash-decode kernel: one query token vs a long KV cache.
+
+Grid ``(batch·kv_heads, num_kv_blocks)`` — each cell processes the G
+grouped query heads of one kv head against one KV block, carrying the
+online-softmax state (m, l, acc per q-group) in VMEM scratch across the
+sequential KV axis.  This is the kernel twin of the sequence-sharded
+decode path (DESIGN.md §5): on a real pod the KV axis is sharded over
+``model`` and each shard runs this kernel over its local blocks, with the
+cross-shard combine done by the psum in ``decode_attention``.
+
+VMEM per cell: q (G·d) + k,v (bk·d) + s (G·bk f32) + acc (G·d f32) —
+< 1 MB at G ≤ 16, bk = 512, d = 128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, len_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, scale: float, block_kv: int,
+):
+    kj = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0].astype(jnp.float32)                # [G, d]
+    k = k_ref[0].astype(jnp.float32)                # [bk, d]
+    v = v_ref[0].astype(jnp.float32)                # [bk, d]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                       # [G, bk]
+    # mask positions beyond the live cache length
+    pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_scratch[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scratch[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_scratch[...] / jnp.maximum(l_scratch[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def flash_decode(
+    q: jax.Array,            # [B, H, d]  — one token per sequence
+    k_cache: jax.Array,      # [B, T, KV, d]
+    v_cache: jax.Array,      # [B, T, KV, d]
+    cache_len: jax.Array,    # i32[B]
+    *,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    bk = min(block_kv, t)
+    assert t % bk == 0, (t, bk)
+    scale = 1.0 / math.sqrt(d)
+
+    qf = q.reshape(b * kv, g, d)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * kv, t, d)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * kv, t, d)
+    lens = jnp.repeat(cache_len, kv).reshape(b * kv, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_kv=bk),
+        grid=(b * kv, t // bk),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, kj: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, kj: (bh, kj, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, kj: (bh, kj, 0)),
+            pl.BlockSpec((1, 1), lambda bh, kj: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, kj: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, lens)
+    return out.reshape(b, h, d)

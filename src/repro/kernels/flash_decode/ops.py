@@ -1,0 +1,19 @@
+"""Dispatching wrapper for flash decode."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_decode.kernel import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+
+
+def decode(q, k_cache, v_cache, cache_len, *, block_kv: int = 512,
+           interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        if not on_tpu:
+            return decode_ref(q, k_cache, v_cache, cache_len)
+        interpret = False
+    return flash_decode(
+        q, k_cache, v_cache, cache_len, block_kv=block_kv, interpret=interpret
+    )

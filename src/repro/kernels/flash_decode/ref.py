@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for flash decode (mirrors models.attention.decode_attention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention
+
+
+def decode_ref(q, k_cache, v_cache, cache_len):
+    """q [B,H,d] → [B,H,d]."""
+    out = decode_attention(q[:, None], k_cache, v_cache, cache_len=cache_len)
+    return out[:, 0]

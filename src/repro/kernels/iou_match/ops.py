@@ -1,0 +1,16 @@
+"""Dispatching wrapper for the IoU kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.iou_match.kernel import iou_matrix
+from repro.kernels.iou_match.ref import iou_ref
+
+
+def iou(boxes_a, boxes_b, *, interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        if not on_tpu:
+            return iou_ref(boxes_a, boxes_b)
+        interpret = False
+    return iou_matrix(boxes_a, boxes_b, interpret=interpret)

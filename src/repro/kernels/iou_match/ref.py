@@ -1,0 +1,2 @@
+"""Pure-jnp oracle: the matcher's own pairwise_iou."""
+from repro.core.matcher import pairwise_iou as iou_ref  # noqa: F401

@@ -1,0 +1,108 @@
+"""Mamba-2 SSD chunk-scan kernel (arXiv:2405.21060, §6 of the paper).
+
+Grid ``(batch·heads, num_chunks)`` — chunks iterate sequentially (last
+grid axis) carrying the recurrent state h ∈ [P, N] in VMEM scratch.  Each
+cell computes the quadratic intra-chunk term (decay-masked C·Bᵀ attention
+matrix on the MXU) plus the linear inter-chunk term through h.
+
+TPU adaptation notes (DESIGN.md §3): the CUDA SSD kernel uses warp-level
+segmented scans; here the within-chunk cumulative decay is a dense
+``cumsum`` on the VPU (fine for Q ≤ 256) and the cross-chunk scan is the
+sequential grid axis — the idiomatic TPU substitute for grid-stride
+persistent blocks.
+
+VMEM per cell at Q=128, P=64, N=128: x (Q·P) + B,C (Q·N) + L (Q·Q f32) +
+state (P·N f32) ≈ 0.3 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref,
+    h_scratch,
+    *, chunk: int,
+):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0].astype(jnp.float32)            # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)          # [Q, 1]
+    bmat = b_ref[0].astype(jnp.float32)         # [Q, N]
+    cmat = c_ref[0].astype(jnp.float32)         # [Q, N]
+    a_h = a_ref[0, 0]                           # scalar: -exp(A_log) per head
+
+    a = dt[:, 0] * a_h                          # [Q] log-decay ≤ 0
+    acs = jnp.cumsum(a)                         # inclusive
+    # intra-chunk decay-masked scores
+    rel = acs[:, None] - acs[None, :]           # [Q, Q]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    l_mat = jnp.where(tri, jnp.exp(rel), 0.0)
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * l_mat                                   # [Q, Q]
+    xdt = x * dt                                # [Q, P]
+    y = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                           # [Q, P]
+    # inter-chunk: y += (C · h) * decay(0→t);  h [P, N]
+    decay_out = jnp.exp(acs)[:, None]           # [Q, 1]
+    y = y + jax.lax.dot_general(
+        cmat, h_scratch[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * decay_out
+    # state update: h ← exp(total) · h + Σ_s exp(acs_Q − acs_s) xdt_s ⊗ B_s
+    decay_to_end = jnp.exp(acs[-1] - acs)[:, None]  # [Q, 1]
+    h_new = jnp.exp(acs[-1]) * h_scratch[...] + jax.lax.dot_general(
+        xdt * decay_to_end, bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # [P, N]
+    h_scratch[...] = h_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_kernel(
+    x: jax.Array,       # [BH, S, P]   (already dt-independent input)
+    dt: jax.Array,      # [BH, S]      (post-softplus)
+    bmat: jax.Array,    # [BH, S, N]
+    cmat: jax.Array,    # [BH, S, N]
+    a: jax.Array,       # [BH]         (-exp(A_log) per (batch, head))
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    dt2 = dt[..., None]
+    a2 = a.reshape(bh, 1)
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=q),
+        grid=(bh, s // q),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, q, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, q, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt2, bmat, cmat, a2)

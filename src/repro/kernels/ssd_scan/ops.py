@@ -1,0 +1,16 @@
+"""Dispatching wrapper for the SSD chunk scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def ssd(x, dt, bmat, cmat, a, *, chunk: int = 128, interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        if not on_tpu:
+            return ssd_ref(x, dt, bmat, cmat, a, chunk=chunk)
+        interpret = False
+    return ssd_scan_kernel(x, dt, bmat, cmat, a, chunk=chunk, interpret=interpret)

@@ -1,0 +1,102 @@
+"""Fused Gamma-Thompson chunk choice kernel (the paper's per-step decision).
+
+For M chunks and C cohorts: transform standard normals through the
+Wilson–Hilferty cube approximation of Γ(α, β) draws and reduce to the
+per-cohort argmax — fused so chunk statistics stream through VMEM once
+per cohort row, with no M-sized intermediate ever hitting HBM.
+
+Grid ``(C, num_chunk_blocks)``, running (value, index) maximum in VMEM
+scratch.  Rejection samplers (Marsaglia–Tsang) are data-dependent loops —
+hostile to the VPU; WH is branch-free (DESIGN.md §3) and the consumer
+only needs ordinal fidelity.  Exhausted chunks arrive with α < 0 as the
+sentinel and are masked to -inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _thompson_kernel(
+    alpha_ref, beta_ref, z_ref, idx_ref, val_ref,
+    best_scratch,
+    *, block_m: int,
+):
+    mj = pl.program_id(1)
+    nm = pl.num_programs(1)
+
+    @pl.when(mj == 0)
+    def _init():
+        best_scratch[0, 0] = NEG_INF          # value
+        best_scratch[0, 1] = -1.0             # index (as f32)
+
+    alpha = alpha_ref[...].astype(jnp.float32)       # [1, bm]
+    beta = beta_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    live = alpha > 0.0
+    a = jnp.maximum(alpha, 1e-6)
+    # Wilson-Hilferty: X ≈ α (1 − 1/9α + z/(3√α))³
+    c = 1.0 - 1.0 / (9.0 * a) + z / (3.0 * jnp.sqrt(a))
+    draw = a * jnp.maximum(c, 0.0) ** 3 / jnp.maximum(beta, 1e-9)
+    score = jnp.where(live, draw, NEG_INF)
+
+    loc = jnp.argmax(score[0]).astype(jnp.int32)
+    val = score[0, loc]
+    gidx = mj * block_m + loc
+
+    @pl.when(val > best_scratch[0, 0])
+    def _update():
+        best_scratch[0, 0] = val
+        best_scratch[0, 1] = gidx.astype(jnp.float32)
+
+    @pl.when(mj == nm - 1)
+    def _finalize():
+        idx_ref[0, 0] = best_scratch[0, 1].astype(jnp.int32)
+        val_ref[0, 0] = best_scratch[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def thompson_choose(
+    alpha: jax.Array,     # f32[M] — N¹+α₀ per chunk; <0 ⇒ exhausted sentinel
+    beta: jax.Array,      # f32[M] — n+β₀
+    z: jax.Array,         # f32[C, M] — standard normals (one row per cohort)
+    *,
+    block_m: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (idx i32[C], value f32[C])."""
+    c, m = z.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        alpha = jnp.concatenate([alpha, jnp.full((pad,), -1.0, alpha.dtype)])
+        beta = jnp.concatenate([beta, jnp.ones((pad,), beta.dtype)])
+        z = jnp.concatenate([z, jnp.zeros((c, pad), z.dtype)], axis=1)
+        m += pad
+
+    idx, val = pl.pallas_call(
+        functools.partial(_thompson_kernel, block_m=bm),
+        grid=(c, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda ci, mj: (0, mj)),
+            pl.BlockSpec((1, bm), lambda ci, mj: (0, mj)),
+            pl.BlockSpec((1, bm), lambda ci, mj: (ci, mj)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda ci, mj: (ci, 0)),
+            pl.BlockSpec((1, 1), lambda ci, mj: (ci, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, 1), jnp.int32),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 2), jnp.float32)],
+        interpret=interpret,
+    )(alpha.reshape(1, m), beta.reshape(1, m), z)
+    return idx[:, 0], val[:, 0]

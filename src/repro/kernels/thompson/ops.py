@@ -1,0 +1,16 @@
+"""Dispatching wrapper for the Thompson choice kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.thompson.kernel import thompson_choose
+from repro.kernels.thompson.ref import thompson_ref
+
+
+def choose(alpha, beta, z, *, block_m: int = 1024, interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        if not on_tpu:
+            return thompson_ref(alpha, beta, z)
+        interpret = False
+    return thompson_choose(alpha, beta, z, block_m=block_m, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused Thompson choice."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.thompson import wilson_hilferty
+
+
+def thompson_ref(alpha, beta, z):
+    """alpha/beta f32[M] (alpha<0 ⇒ exhausted), z f32[C,M] →
+    (idx i32[C], val f32[C])."""
+    live = alpha > 0.0
+    a = jnp.maximum(alpha, 1e-6)
+    draw = wilson_hilferty(a[None, :], z) / jnp.maximum(beta, 1e-9)[None, :]
+    score = jnp.where(live[None, :], draw, -1e30)
+    idx = jnp.argmax(score, axis=-1).astype(jnp.int32)
+    val = jnp.take_along_axis(score, idx[:, None], axis=-1)[:, 0]
+    return idx, val

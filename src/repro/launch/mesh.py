@@ -1,0 +1,28 @@
+"""Production mesh construction (dry-run contract, DESIGN.md §6).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; the dry-run sets the 512-device XLA flag before
+any jax import and only then calls it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def describe(mesh) -> str:
+    return f"mesh{tuple(mesh.devices.shape)} axes={mesh.axis_names}"

@@ -1,0 +1,70 @@
+"""Serving launcher: prefill + autoregressive decode for any --arch.
+
+Reduced configs on CPU; full configs lower on the pod meshes (dry-run
+proves it).  Demonstrates the production decode loop with the sharded KV
+cache layout and greedy sampling.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, RunConfig, scale_down
+from repro.models.transformer import init_decode_cache, init_params
+from repro.serve.serve_step import build_decode_step, build_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-7b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = scale_down(cfg)
+    run = RunConfig(param_dtype="float32", block_q=16, block_kv=16,
+                    unroll=False, remat=False, sequence_parallel=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    b, s = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch = {
+            "tokens": batch["tokens"][:, : s - cfg.num_patches],
+            "patches": jnp.zeros((b, cfg.num_patches, cfg.patch_dim), jnp.float32),
+        }
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.zeros((b, s, cfg.d_model), jnp.float32)
+
+    prefill = jax.jit(build_prefill_step(cfg, run))
+    decode = jax.jit(build_decode_step(cfg, run))
+
+    t0 = time.time()
+    logits = prefill(params, batch)
+    print(f"prefill [{b}×{s}] → logits {logits.shape} in {time.time()-t0:.2f}s")
+
+    cache = init_decode_cache(cfg, b, s + args.tokens + 1, jnp.float32)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens):
+        tok, _, cache = decode(params, tok, cache)
+        out.append(tok)
+    dt = time.time() - t0
+    seq = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({args.tokens * b / dt:.1f} tok/s on CPU)")
+    print("sample:", seq[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,591 @@
+"""Cell builders: (arch × shape × mesh) → lowered-ready step + specs.
+
+``build_cell`` produces everything the dry-run / launchers need:
+  * the step function (train_step / prefill / decode),
+  * ShapeDtypeStruct stand-ins for every input (no allocation),
+  * in_shardings resolved from the logical rules,
+  * the analytic MODEL_FLOPS for the roofline's useful-compute ratio.
+
+Shape-dependent sharding decisions (DESIGN.md §5) live here:
+  * batch shards over dp axes when divisible, else replicates (long_500k);
+  * decode KV caches seq-shard over ``model`` (and additionally over
+    ``data`` when batch can't use it);
+  * MoE group count = dp shard count;
+  * head counts pad to the model-axis size (pad_heads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules, param_shardings
+from repro.models import mamba2
+from repro.models.transformer import (
+    DecodeCache,
+    KVCache,
+    backbone_schema,
+    forward_decode,
+    init_decode_cache,
+    pad_heads,
+    pad_vocab,
+)
+from repro.models.layers import ParamSpec, Schema, np_prod
+from repro.serve.serve_step import build_decode_step, build_prefill_step
+from repro.train.optimizer import QTensor
+from repro.train.train_step import TrainState, build_train_step, init_train_state
+
+
+class Cell(NamedTuple):
+    name: str
+    step_fn: Callable
+    args: tuple                 # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    cfg: ModelConfig            # possibly head-padded
+    run: RunConfig
+    model_flops: float          # analytic useful FLOPs per step (global)
+    decode_tokens: int          # tokens produced per step (decode) else 0
+    # scan correction (train with microbatches>1): the µbatch grad body is
+    # lowered separately; totals = full + (k-1)·body (DESIGN.md §6)
+    body_fn: Optional[Callable] = None
+    body_args: Optional[tuple] = None
+    body_in_shardings: Optional[tuple] = None
+    scan_repeats: int = 1
+    out_shardings: Any = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _batch_spec(mesh: Mesh, batch: int, rank: int) -> P:
+    """Shard the batch dim over dp axes when divisible."""
+    dp = _dp_axes(mesh)
+    if batch % _dp_size(mesh) == 0:
+        lead = dp if len(dp) > 1 else dp[0]
+        return P(lead, *([None] * (rank - 1)))
+    # try data only
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return P("data", *([None] * (rank - 1)))
+    return P(*([None] * rank))
+
+
+def batch_inputs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool):
+    """ShapeDtypeStructs for the non-cache inputs of one step."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        out["tokens"] = _sds((b, s - cfg.num_patches), jnp.int32)
+        out["patches"] = _sds((b, cfg.num_patches, cfg.patch_dim), jnp.bfloat16)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.encoder_layers:
+        out["frames"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    if with_labels:
+        n_lab = s - cfg.num_patches if cfg.family == "vlm" else s
+        out["labels"] = _sds((b, n_lab), jnp.int32)
+    return out
+
+
+def batch_shardings(batch: dict, mesh: Mesh, global_batch: int):
+    return {
+        k: NamedSharding(mesh, _batch_spec(mesh, global_batch, v.ndim))
+        for k, v in batch.items()
+    }
+
+
+# --------------------------------------------------------------------------
+# optimizer-state sharding (ZeRO-style)
+# --------------------------------------------------------------------------
+
+def _flat_spec(mesh: Mesh, n: int) -> P:
+    """Spec for a flat 1-D buffer: shard over every axis whose product
+    divides n (maximally sharded), else replicate."""
+    axes = [a for a in ("pod", "data", "model") if a in mesh.axis_names]
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if n % total == 0:
+        return P(tuple(axes))
+    if "model" in mesh.axis_names and n % mesh.shape["model"] == 0:
+        return P("model")
+    return P(None)
+
+
+def opt_state_shardings(params_shardings, mesh: Mesh, state: TrainState):
+    """ZeRO-style optimizer sharding: moments inherit the param spec PLUS a
+    ``data``-axis shard on the largest still-replicated dim (so fp32 state
+    spreads over data × model, not model alone); QTensors shard flat over
+    every dividing axis; scalars replicate."""
+    data_n = mesh.shape.get("data", 1)
+
+    def zero_spec(ps: NamedSharding, shape: tuple) -> NamedSharding:
+        spec = list(ps.spec) + [None] * (len(shape) - len(ps.spec))
+        if "data" in mesh.axis_names and not any(
+            (ax == "data" or (isinstance(ax, tuple) and "data" in ax))
+            for ax in spec if ax
+        ):
+            # largest replicated dim divisible by |data|
+            cands = [
+                (shape[i], i) for i in range(len(shape))
+                if spec[i] is None and shape[i] % data_n == 0
+            ]
+            if cands:
+                _, i = max(cands)
+                spec[i] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    def _axis_size(ax) -> int:
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            n *= mesh.shape[a]
+        return n
+
+    def moment(ps_tree, m_tree):
+        def leaf(ps, m):
+            if isinstance(m, QTensor):
+                if m.blocked:
+                    # CONGRUENT sharding: q/scale carry the param's own spec
+                    # so the optimizer update stays fully local (flat-sharded
+                    # state forced full-param all-gathers — §Perf iter 3).
+                    qs = zero_spec(ps, m.q.shape)
+                    sspec = list(qs.spec) + [None] * (
+                        len(m.scale.shape) - len(qs.spec)
+                    )
+                    # scale's last dim is blocks-of-last: drop its axis if
+                    # the block count doesn't divide
+                    if len(sspec) >= 1 and sspec[len(m.scale.shape) - 1]:
+                        ax = sspec[len(m.scale.shape) - 1]
+                        if m.scale.shape[-1] % _axis_size(ax):
+                            sspec[len(m.scale.shape) - 1] = None
+                    return QTensor(
+                        q=qs,
+                        scale=NamedSharding(mesh, P(*sspec[: len(m.scale.shape)])),
+                        shape=m.shape,
+                        block=m.block,
+                    )
+                return QTensor(
+                    q=NamedSharding(mesh, _flat_spec(mesh, m.q.shape[0])),
+                    scale=NamedSharding(mesh, _flat_spec(mesh, m.scale.shape[0])),
+                    shape=m.shape,
+                    block=m.block,
+                )
+            return zero_spec(ps, m.shape)
+        return jax.tree.map(
+            leaf, ps_tree, m_tree, is_leaf=lambda x: isinstance(x, QTensor)
+        )
+
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        params=params_shardings,
+        opt=type(state.opt)(
+            step=rep,
+            m=moment(params_shardings, state.opt.m),
+            v=moment(params_shardings, state.opt.v),
+        ),
+        ef=None if state.ef is None else jax.tree.map(lambda _: rep, state.ef),
+        step=rep,
+    )
+
+
+# --------------------------------------------------------------------------
+# decode-cache sharding
+# --------------------------------------------------------------------------
+
+def decode_cache_shardings(cfg: ModelConfig, cache: DecodeCache, mesh: Mesh,
+                           batch: int):
+    """KV: [B, T, KV, hd] → batch over data (if divisible), T over model
+    (plus data when batch is 1 — long_500k).  Mamba: heads over model."""
+    dp_ok = "data" in mesh.axis_names and batch % mesh.shape["data"] == 0
+    b_ax = "data" if dp_ok else None
+    seq_axes = ("model",) if dp_ok else tuple(
+        a for a in ("pod", "data", "model") if a in mesh.axis_names
+    )
+    def kv_spec(t: int) -> P:
+        n_seq = 1
+        for a in seq_axes:
+            n_seq *= mesh.shape[a]
+        seq = tuple(seq_axes) if t % n_seq == 0 else (
+            "model" if t % mesh.shape["model"] == 0 else None
+        )
+        return P(b_ax, seq, None, None)
+
+    layers = []
+    for lc in cache.layers:
+        if isinstance(lc, KVCache):
+            sp = NamedSharding(mesh, kv_spec(lc.k.shape[1]))
+            layers.append(KVCache(k=sp, v=sp))
+        else:  # MambaCache
+            layers.append(
+                mamba2.MambaCache(
+                    conv=NamedSharding(mesh, P(b_ax, None, "model")),
+                    ssm=NamedSharding(mesh, P(b_ax, "model", None, None)),
+                )
+            )
+    cross = []
+    for cc in cache.cross:
+        if cc is None:
+            cross.append(None)
+        else:
+            sp = NamedSharding(mesh, P(b_ax, None, None, None))
+            cross.append(KVCache(k=sp, v=sp))
+    return DecodeCache(
+        layers=tuple(layers),
+        cross=tuple(cross),
+        pos=NamedSharding(mesh, P()),
+    )
+
+
+# --------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+# --------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_active·tokens convention (backward ×3 included for train)."""
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    # attention core (not in 6ND): causal-optimal qk+pv
+    attn_layers = sum(1 for i in range(cfg.num_layers) if cfg.is_attn_layer(i))
+    if attn_layers and cfg.num_heads:
+        hd = cfg.resolved_head_dim
+        kv_len = shape.seq_len
+        per_tok = 2.0 * kv_len * cfg.num_heads * hd * 2.0
+        if not shape.is_decode:
+            per_tok /= 2.0   # causal triangle
+        core = attn_layers * tokens * per_tok
+        if cfg.encoder_layers:
+            core += cfg.encoder_layers * tokens * 2.0 * kv_len * cfg.num_heads * hd * 2.0
+        if shape.kind == "train":
+            core *= 3.0
+        flops += core
+    return flops
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameters touched per token (MoE counts top_k experts once)."""
+    schema = backbone_schema(cfg)
+    total = 0.0
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    for path, spec in flat:
+        parts = [str(getattr(p, "key", p)) for p in path]
+        n = float(np_prod(spec.shape))
+        if "moe" in parts and parts[-1] in ("w_gate", "w_up", "w_down"):
+            n *= cfg.moe.top_k / cfg.moe.num_experts
+        if parts[-1] == "table":
+            continue  # embedding gather isn't a matmul; unembed counted below
+        total += n
+    # unembed matmul
+    total += cfg.vocab * cfg.d_model
+    return total
+
+
+# --------------------------------------------------------------------------
+# cell construction
+# --------------------------------------------------------------------------
+
+def choose_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Pick the gradient-accumulation factor so the per-µbatch activation
+    footprint (saved residuals + logits + backward transients) stays well
+    under HBM.  Budget 4 GiB of residual checkpoints per device."""
+    dp = _dp_size(mesh)
+    local_batch = max(shape.global_batch // dp, 1)
+    saved = cfg.num_layers * local_batch * shape.seq_len * cfg.d_model * 2
+    budget = 4 * 1024**3
+    k = 1
+    while saved / k > budget and k < local_batch and local_batch % (k * 2) == 0:
+        k *= 2
+    return k
+
+
+def build_cell(
+    arch_cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    run: Optional[RunConfig] = None,
+) -> Cell:
+    model_shards = mesh.shape.get("model", 1)
+    cfg = pad_heads(arch_cfg, model_shards) if arch_cfg.num_heads else arch_cfg
+    cfg = pad_vocab(cfg, model_shards)
+    dp = _dp_size(mesh)
+    moe_groups = max(
+        min(dp, shape.global_batch * (1 if shape.is_decode else shape.seq_len)), 1
+    )
+    if run is None:
+        run = RunConfig(
+            unroll=True,
+            block_q=2048 if shape.kind == "train" else 8192,
+            block_kv=2048 if shape.kind == "train" else 8192,
+            causal_block_skip=False,      # paper-faithful baseline; perf pass flips
+            sequence_parallel=False,      # µbatching is the default memory lever
+            remat=shape.kind == "train",
+            microbatches=choose_microbatches(cfg, shape, mesh)
+            if shape.kind == "train"
+            else 1,
+            adam_8bit=param_count(cfg) > 6e10,
+        )
+    if run.microbatches == 0:
+        run = dataclasses.replace(
+            run,
+            microbatches=choose_microbatches(cfg, shape, mesh)
+            if shape.kind == "train"
+            else 1,
+        )
+    rules = ShardingRules.for_mesh(mesh, fsdp_params=run.fsdp_params)
+    schema = backbone_schema(cfg)
+    p_shardings = param_shardings(schema, rules)
+    p_abstract = jax.tree.map(
+        lambda s: _sds(s.shape, run.dtype()),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    flops = model_flops(arch_cfg, shape)     # useful flops exclude head padding
+    name = f"{arch_cfg.name}:{shape.name}"
+
+    if shape.kind == "train":
+        step = build_train_step(cfg, run, moe_groups=moe_groups, mesh=mesh)
+        batch = batch_inputs(cfg, shape, with_labels=True)
+        b_shard = batch_shardings(batch, mesh, shape.global_batch)
+        state_abs = jax.eval_shape(
+            lambda p: init_train_state(p, run), p_abstract
+        )
+        state_shardings = opt_state_shardings(p_shardings, mesh, state_abs)
+        body_fn = body_args = body_sh = None
+        k = max(run.microbatches, 1)
+        if k > 1:
+            from repro.train.train_step import microbatch_grad
+
+            mb = {
+                key: _sds((v.shape[0] // k,) + v.shape[1:], v.dtype)
+                for key, v in batch.items()
+            }
+            mb_sh = batch_shardings(mb, mesh, shape.global_batch // k)
+            body_fn = lambda p, b: microbatch_grad(
+                p, b, cfg, run, moe_groups=moe_groups
+            )
+            body_args = (p_abstract, mb)
+            body_sh = (p_shardings, mb_sh)
+        return Cell(
+            name=name,
+            step_fn=step,
+            args=(state_abs, batch),
+            in_shardings=(state_shardings, b_shard),
+            cfg=cfg,
+            run=run,
+            model_flops=flops,
+            decode_tokens=0,
+            body_fn=body_fn,
+            body_args=body_args,
+            body_in_shardings=body_sh,
+            scan_repeats=k,
+        )
+
+    if shape.kind == "prefill":
+        step = build_prefill_step(cfg, run, moe_groups=moe_groups)
+        batch = batch_inputs(cfg, shape, with_labels=False)
+        b_shard = batch_shardings(batch, mesh, shape.global_batch)
+        return Cell(
+            name=name,
+            step_fn=step,
+            args=(p_abstract, batch),
+            in_shardings=(p_shardings, b_shard),
+            cfg=cfg,
+            run=run,
+            model_flops=flops,
+            decode_tokens=0,
+        )
+
+    # decode
+    step = build_decode_step(cfg, run, moe_groups=moe_groups)
+    b = shape.global_batch
+    cache_abs = jax.eval_shape(
+        lambda: init_decode_cache(cfg, b, shape.seq_len, run.dtype())
+    )
+    cache_sh = decode_cache_shardings(cfg, cache_abs, mesh, b)
+    token = _sds((b, 1), jnp.int32)
+    token_sh = NamedSharding(mesh, _batch_spec(mesh, b, 2))
+    return Cell(
+        name=name,
+        step_fn=step,
+        args=(p_abstract, token, cache_abs),
+        in_shardings=(p_shardings, token_sh, cache_sh),
+        cfg=cfg,
+        run=run,
+        model_flops=flops,
+        decode_tokens=b,
+    )
+
+
+def param_count(cfg: ModelConfig) -> float:
+    from repro.models.layers import count_params
+
+    return float(count_params(backbone_schema(cfg)))
+
+
+def _sharded_bytes(tree, shardings) -> float:
+    """Per-device bytes of a pytree given its NamedShardings (exact)."""
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(shardings)):
+        n = float(np_prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        if hasattr(sh, "num_devices") and sh.num_devices:
+            # shard factor = product of mesh axes used by the spec
+            used = 1
+            for ax in jax.tree.leaves(tuple(sh.spec)):
+                if ax is not None:
+                    used *= sh.mesh.shape[ax]
+            n /= used
+        total += n
+    return total
+
+
+def analytic_hbm(cell: Cell, mesh: Mesh, shape: ShapeConfig) -> dict:
+    """TPU-side per-device HBM estimate (DESIGN.md §6).
+
+    XLA:CPU's memory_analysis over-reports by 2-4× on these graphs: bf16
+    scatter/psum/select are wrapped in f32 on CPU and elementwise chains
+    don't fuse, so each layer's residual appears as O(10) f32 copies
+    (evidence in EXPERIMENTS.md §Dry-run).  This model counts what a TPU
+    actually holds: exact sharded state bytes + the dominant transients.
+    """
+    cfg, run = cell.cfg, cell.run
+    dp = _dp_size(mesh)
+    mp = mesh.shape.get("model", 1)
+    state_bytes = _sharded_bytes(cell.args, cell.in_shardings)
+    k = max(run.microbatches, 1)
+    tokens_local = shape.global_batch * (
+        1 if shape.is_decode else shape.seq_len
+    ) / dp / k
+    act = 0.0
+    if shape.kind == "train":
+        # saved layer-boundary residuals (bf16; seq-sharded under SP) +
+        # logits + a live transient window
+        sp = 1.0 / mp if run.sequence_parallel else 1.0
+        act += cfg.num_layers * tokens_local * cfg.d_model * 2 * sp
+        act += tokens_local * (cfg.vocab / mp) * 4          # logits f32
+        act += 6 * tokens_local * cfg.d_model * 4           # live window
+        if cfg.d_ff:
+            act += 2 * tokens_local * (cfg.d_ff / mp) * 4
+    elif shape.kind == "prefill":
+        seq_factor = 1.0 / mp if run.sequence_parallel else 1.0
+        act += 4 * tokens_local * cfg.d_model * 2 * seq_factor
+        act += 2 * tokens_local * cfg.d_model * 2           # attn gather live
+        act += run.block_q * run.block_kv * 4 * 3           # score tiles f32
+        if cfg.d_ff:
+            act += tokens_local * (cfg.d_ff / mp) * 4
+    else:
+        act += 2 * tokens_local * cfg.vocab / mp * 4        # decode logits
+        act += 16 * tokens_local * cfg.d_model * 4
+    if cfg.moe is not None and not shape.is_decode:
+        t_g = shape.global_batch * shape.seq_len / dp / k
+        act += 2 * (t_g + 1) * cfg.d_model * 2              # combine slabs
+        c_cap = max(
+            int(t_g * cfg.moe.top_k * cfg.moe.capacity_factor / cfg.moe.num_experts), 1
+        )
+        e_local = max(cfg.moe.num_experts // mp, 1)
+        act += 3 * e_local * c_cap * max(cfg.moe.d_ff / dp, 1) * 4
+        act += e_local * c_cap * cfg.d_model * 2 * 2        # xe + ye
+    total = state_bytes + act
+    return {
+        "analytic_state_bytes": state_bytes,
+        "analytic_activation_bytes": act,
+        "analytic_hbm_bytes": total * 1.15,                 # fragmentation slack
+        "analytic_fits_hbm": total * 1.15 <= 16 * 1024**3,
+    }
+
+
+def build_mem_cell(
+    arch_cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    run: Optional[RunConfig] = None,
+) -> Optional[Cell]:
+    """Memory-fidelity variant: scan-over-layers (stacked params) so
+    ``memory_analysis`` reflects buffer reuse.  Returns None for decode
+    shapes (per-layer transients are small; the cost config's memory
+    analysis is already faithful there)."""
+    if shape.is_decode:
+        return None
+    model_shards = mesh.shape.get("model", 1)
+    cfg = pad_heads(arch_cfg, model_shards) if arch_cfg.num_heads else arch_cfg
+    cfg = pad_vocab(cfg, model_shards)
+    dp = _dp_size(mesh)
+    moe_groups = max(min(dp, shape.global_batch * shape.seq_len), 1)
+    base = run or RunConfig()
+    run = dataclasses.replace(
+        base,
+        stacked=True,
+        unroll=True,
+        block_q=2048 if shape.kind == "train" else 8192,
+        block_kv=2048 if shape.kind == "train" else 8192,
+        causal_block_skip=base.causal_block_skip,
+        # prefill residuals at 32k tokens/dev don't fit without SP; train
+        # fits via µbatching and avoids SP's gather traffic
+        sequence_parallel=(
+            base.sequence_parallel if run is not None and shape.kind == "train"
+            else shape.kind == "prefill"
+        ),
+        remat=shape.kind == "train",
+        microbatches=(
+            base.microbatches
+            if (run is not None and base.microbatches >= 1 and shape.kind == "train")
+            else (
+                choose_microbatches(cfg, shape, mesh)
+                if shape.kind == "train"
+                else 1
+            )
+        ),
+        adam_8bit=param_count(cfg) > 6e10,
+    )
+    from repro.models.stacked import stack_schema
+
+    schema, _, _ = stack_schema(cfg)
+    rules = ShardingRules.for_mesh(mesh, fsdp_params=run.fsdp_params)
+    p_shardings = param_shardings(schema, rules)
+    p_abstract = jax.tree.map(
+        lambda s: _sds(s.shape, run.dtype()),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    name = f"{arch_cfg.name}:{shape.name}:mem"
+    if shape.kind == "train":
+        step = build_train_step(cfg, run, moe_groups=moe_groups, mesh=mesh)
+        batch = batch_inputs(cfg, shape, with_labels=True)
+        b_shard = batch_shardings(batch, mesh, shape.global_batch)
+        state_abs = jax.eval_shape(lambda p: init_train_state(p, run), p_abstract)
+        state_shardings = opt_state_shardings(p_shardings, mesh, state_abs)
+        rep = NamedSharding(mesh, P())
+        metric_sh = {"loss": rep, "lr": rep, "grad_norm": rep}
+        return Cell(
+            name=name, step_fn=step, args=(state_abs, batch),
+            in_shardings=(state_shardings, b_shard), cfg=cfg, run=run,
+            model_flops=0.0, decode_tokens=0,
+            out_shardings=(state_shardings, metric_sh),
+        )
+    step = build_prefill_step(cfg, run, moe_groups=moe_groups)
+    batch = batch_inputs(cfg, shape, with_labels=False)
+    b_shard = batch_shardings(batch, mesh, shape.global_batch)
+    return Cell(
+        name=name, step_fn=step, args=(p_abstract, batch),
+        in_shardings=(p_shardings, b_shard), cfg=cfg, run=run,
+        model_flops=0.0, decode_tokens=0,
+    )

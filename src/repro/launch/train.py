@@ -1,0 +1,75 @@
+"""Training launcher for the assigned architectures.
+
+On this CPU container it runs reduced configs; the same driver lowers the
+full config on a pod (the dry-run proves the sharding).  Handles: config
+selection (--arch), deterministic data, µbatching, checkpoint/restart with
+the RestartPolicy, and the 8-bit/compressed options.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b --steps 50 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, RunConfig, scale_down
+from repro.data.pipeline import DeterministicTokenPipeline, TrainBatchSpec
+from repro.distributed.fault_tolerance import RestartPolicy
+from repro.models.transformer import init_params
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_step import build_train_step, init_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--adam-8bit", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale config (default on this container)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = scale_down(cfg, layers=4, d_model=128, heads=4, d_ff=256, vocab=512)
+    run = RunConfig(
+        param_dtype="float32", block_q=32, block_kv=32, unroll=False,
+        remat=False, sequence_parallel=False, learning_rate=args.lr,
+        microbatches=args.microbatches, adam_8bit=args.adam_8bit,
+    )
+    pipe = DeterministicTokenPipeline(
+        TrainBatchSpec(args.batch, args.seq, cfg.vocab), seed=0
+    )
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    policy = RestartPolicy(checkpoint_every_steps=args.ckpt_every)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = init_train_state(params, run)
+    start = 0
+    resumed = mgr.restore_latest(state)
+    if resumed:
+        start, state, _ = resumed
+        print(f"resumed from step {start} (lose_at_most="
+              f"{policy.lose_at_most_steps} steps by construction)")
+    step_fn = jax.jit(build_train_step(cfg, run))
+    t0 = time.time()
+    for step in range(start, args.steps):
+        state, metrics = step_fn(state, pipe.batch_at(step))
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step)",
+                  flush=True)
+        if step and step % policy.checkpoint_every_steps == 0:
+            mgr.save(step, state, extra={"arch": args.arch})
+
+
+if __name__ == "__main__":
+    main()

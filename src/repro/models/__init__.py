@@ -1,0 +1,1 @@
+"""Model zoo: unified backbone + detection heads for all assigned archs."""

@@ -1,0 +1,222 @@
+"""Attention: blocked-causal (train/prefill) and partial-softmax decode.
+
+Memory-bounded by construction: scores are only ever materialized for one
+(block_q × block_kv) tile (f32), with online-softmax accumulators carried
+across KV tiles — the standard flash-attention recurrence expressed in
+plain JAX so that (a) the XLA dry-run's temp memory stays bounded at any
+sequence length and (b) it doubles as the oracle for the Pallas kernel
+(``repro.kernels.flash_attention``).
+
+Two loop encodings, same math:
+  * ``unroll=True``  — Python loops → fully unrolled HLO.  Used by the
+    dry-run so ``cost_analysis`` sees every FLOP (XLA counts ``while``
+    bodies once), and enabling *static* causal block skipping
+    (``causal_skip``): KV tiles strictly above the diagonal are never
+    emitted, halving attention FLOPs vs. masked-full.
+  * ``unroll=False`` — ``lax.scan`` over tiles → compact HLO for runtime.
+
+Decode (``decode_attention``) evaluates one query against a long KV cache
+with a split-softmax that is *sharding-oblivious*: reductions over the KV
+sequence axis lower to psums when that axis is sharded over ``model``
+(flash-decoding; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """GQA: expand kv heads to match q heads (B,S,KV,D) → (B,S,H,D).
+
+    Done *before* sharding so q/k/v all shard head-wise over ``model``.
+    """
+    kv = k.shape[2]
+    if kv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kv, axis=2)
+
+
+def _attn_tile(q, k, v, mask, scale, *, probs_dtype=jnp.float32):
+    """One (bq × bk) tile: returns (scores_max, exp_scores, pv) in f32.
+
+    probs_dtype=bf16 halves the probability-matrix HBM traffic (the tile's
+    dominant tensor) at <1e-3 output error — accumulation stays f32 via
+    preferred_element_type (standard flash-attention practice).
+    """
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                 # [B,H,Q]
+    p = jnp.exp(s - m[..., None]).astype(probs_dtype)
+    pv = jnp.einsum(
+        "bhqk,bkhd->bqhd", p, v.astype(probs_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return m, jnp.sum(p, axis=-1, dtype=jnp.float32), pv
+
+
+def _merge(acc, m_new, l_new, pv_new):
+    """Online-softmax merge of a new tile into (m, l, o) accumulators."""
+    m, l, o = acc
+    m2 = jnp.maximum(m, m_new)
+    c1 = jnp.exp(m - m2)
+    c2 = jnp.exp(m_new - m2)
+    l2 = l * c1 + l_new * c2
+    o2 = o * c1.transpose(0, 2, 1)[..., None] + pv_new * c2.transpose(0, 2, 1)[..., None]
+    return m2, l2, o2
+
+
+def blocked_attention(
+    q: jax.Array,                      # [B, S, H, D]
+    k: jax.Array,                      # [B, T, H, D]  (kv already repeated)
+    v: jax.Array,                      # [B, T, H, D]
+    *,
+    causal: bool = True,
+    block_q: int = 2048,
+    block_kv: int = 2048,
+    causal_skip: bool = True,
+    unroll: bool = False,
+    q_offset: int = 0,                 # global position of q[0] (chunked prefill)
+    probs_dtype=jnp.float32,
+) -> jax.Array:
+    """Flash-style blocked attention.  Returns [B, S, H, D] in q.dtype."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    bq = min(block_q, s)
+    bk = min(block_kv, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    nq, nk = s // bq, t // bk
+
+    q_pos = jnp.arange(s) + q_offset
+    k_pos = jnp.arange(t)
+
+    def kv_tile_mask(qi: int, ki: int):
+        """Causal mask for tile (qi, ki); None if tile is fully visible."""
+        if not causal:
+            return None
+        lo_q = qi * bq + q_offset
+        hi_k = (ki + 1) * bk - 1
+        if lo_q >= hi_k:              # tile fully below diagonal
+            return None
+        qp = q_pos[qi * bq : (qi + 1) * bq]
+        kp = k_pos[ki * bk : (ki + 1) * bk]
+        return qp[None, None, :, None] >= kp[None, None, None, :]
+
+    def tile_needed(qi: int, ki: int) -> bool:
+        if not causal or not causal_skip:
+            return True
+        return ki * bk <= qi * bq + q_offset + bq - 1
+
+    if unroll:
+        # tile-level rematerialization: the O(bq×bk) probability matrix is
+        # recomputed inside each tile's backward, so the bwd peak is O(one
+        # tile), not O(S²/heads) — the flash-attention memory property,
+        # enforced via jax.checkpoint around the tile body.
+        def tile_body(acc, qb, kb, vb, mask):
+            return _merge(
+                acc, *_attn_tile(qb, kb, vb, mask, scale, probs_dtype=probs_dtype)
+            )
+
+        tile_ckpt = jax.checkpoint(tile_body, static_argnums=())
+        outs = []
+        for qi in range(nq):
+            qb = q[:, qi * bq : (qi + 1) * bq]
+            m = jnp.full((b, h, bq), NEG_INF, jnp.float32)
+            l = jnp.zeros((b, h, bq), jnp.float32)
+            o = jnp.zeros((b, bq, h, d), jnp.float32)
+            acc = (m, l, o)
+            for ki in range(nk):
+                if not tile_needed(qi, ki):
+                    continue
+                kb = k[:, ki * bk : (ki + 1) * bk]
+                vb = v[:, ki * bk : (ki + 1) * bk]
+                acc = tile_ckpt(acc, qb, kb, vb, kv_tile_mask(qi, ki))
+            m, l, o = acc
+            outs.append(o / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None])
+        return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+    # scan encoding: outer scan over q tiles, inner scan over kv tiles with
+    # dynamic masking (no block skipping — runtime path trades FLOPs for
+    # compact HLO; the Pallas kernel recovers the skip on TPU).
+    kr = k.reshape(b, nk, bk, h, d)
+    vr = v.reshape(b, nk, bk, h, d)
+    qr = q.reshape(b, nq, bq, h, d)
+
+    def q_step(_, qi):
+        qb = qr[:, qi]
+        q_lo = qi * bq + q_offset
+
+        def kv_step(acc, ki):
+            kb = kr[:, ki]
+            vb = vr[:, ki]
+            if causal:
+                qp = q_lo + jnp.arange(bq)
+                kp = ki * bk + jnp.arange(bk)
+                mask = qp[None, None, :, None] >= kp[None, None, None, :]
+            else:
+                mask = None
+            return _merge(
+                acc, *_attn_tile(qb, kb, vb, mask, scale, probs_dtype=probs_dtype)
+            ), None
+
+        acc0 = (
+            jnp.full((b, h, bq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, bq), jnp.float32),
+            jnp.zeros((b, bq, h, d), jnp.float32),
+        )
+        (m, l, o), _ = jax.lax.scan(kv_step, acc0, jnp.arange(nk))
+        out = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, tiles = jax.lax.scan(q_step, None, jnp.arange(nq))   # [nq, B, bq, H, D]
+    return jnp.moveaxis(tiles, 0, 1).reshape(b, s, h, d)
+
+
+def decode_attention(
+    q: jax.Array,                      # [B, 1, H, D]
+    k_cache: jax.Array,                # [B, T, KV, D]
+    v_cache: jax.Array,                # [B, T, KV, D]
+    *,
+    cache_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """One-token attention against a (possibly sequence-sharded) KV cache.
+
+    All KV-axis reductions are expressed as plain jnp reductions so GSPMD
+    lowers them to (max, sum) psums over ``model`` when T is sharded —
+    the flash-decoding combine.  GQA via reshape, no repeat: q grouped as
+    (B, KV, G, D) so memory traffic over the cache is O(T·KV·D).
+    """
+    b, one, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kv, g, d)
+    s = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                                # [B,KV,G,T]
+    if cache_len is not None:
+        pos = jnp.arange(t)
+        s = jnp.where(pos[None, None, None, :] < cache_len[:, None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum(
+        "bkgt,btkd->bkgd", p / jnp.maximum(l, 1e-30), v_cache.astype(jnp.float32)
+    )
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention_flops(
+    tokens: int, kv_len: int, heads: int, head_dim: int, *, causal: bool
+) -> float:
+    """Analytic attention FLOPs (qk + pv), causal-optimal when causal."""
+    full = 2.0 * tokens * kv_len * heads * head_dim * 2.0
+    return full / 2.0 if causal else full

@@ -1,0 +1,97 @@
+"""Detection head + surrogate scorer.
+
+``DetectionHead`` maps pooled backbone features of a frame to D detection
+slots (box, objectness, class logits, appearance feature) — a light
+anchor-free head in the spirit of DETR's box MLP.  It is what makes the
+assigned backbones usable as the "expensive detector" in the ExSample loop
+(DESIGN.md §2).
+
+``SurrogateScorer`` is the cheap model of the BlazeIt-style baseline: a
+two-layer MLP over frame embeddings producing a scalar relevance score.
+Its training loop lives in ``repro.train``; its cost accounting in
+``repro.sim.costmodel``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, Schema, materialize
+
+
+class HeadOutput(NamedTuple):
+    boxes: jax.Array      # f32[B, D, 4]
+    scores: jax.Array     # f32[B, D]   (objectness, post-sigmoid)
+    cls_logits: jax.Array # f32[B, D, C]
+    feats: jax.Array      # f32[B, D, F]
+
+
+def head_schema(d_model: int, *, max_dets: int, num_classes: int, feat_dim: int) -> Schema:
+    width = 4 + 1 + num_classes + feat_dim
+    return {
+        "w1": ParamSpec((d_model, 4 * d_model), ("embed", "mlp")),
+        "w2": ParamSpec((4 * d_model, max_dets * width), ("mlp", None)),
+        "b2": ParamSpec((max_dets * width,), (None,), init="zeros"),
+    }
+
+
+def apply_head(
+    p: dict, feats: jax.Array, *, max_dets: int, num_classes: int, feat_dim: int
+) -> HeadOutput:
+    """feats f32[B, d_model] (pooled backbone features) → detections."""
+    h = jax.nn.gelu(feats @ p["w1"], approximate=True)
+    out = (h @ p["w2"] + p["b2"]).reshape(
+        feats.shape[0], max_dets, 4 + 1 + num_classes + feat_dim
+    )
+    boxes = jax.nn.sigmoid(out[..., :4])
+    scores = jax.nn.sigmoid(out[..., 4])
+    cls_logits = out[..., 5 : 5 + num_classes]
+    f = out[..., 5 + num_classes :]
+    f = f / jnp.maximum(jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-9)
+    return HeadOutput(boxes=boxes, scores=scores, cls_logits=cls_logits, feats=f)
+
+
+def pool_features(hidden: jax.Array) -> jax.Array:
+    """Mean-pool sequence features [B, S, D] → [B, D]."""
+    return jnp.mean(hidden.astype(jnp.float32), axis=1)
+
+
+# --------------------------------------------------------------------------
+# surrogate (BlazeIt-style specialized model)
+# --------------------------------------------------------------------------
+
+def surrogate_schema(embed_dim: int, hidden: int = 128) -> Schema:
+    return {
+        "w1": ParamSpec((embed_dim, hidden), (None, None)),
+        "b1": ParamSpec((hidden,), (None,), init="zeros"),
+        "w2": ParamSpec((hidden, hidden), (None, None)),
+        "b2": ParamSpec((hidden,), (None,), init="zeros"),
+        "w3": ParamSpec((hidden, 1), (None, None)),
+        "b3": ParamSpec((1,), (None,), init="zeros"),
+    }
+
+
+def init_surrogate(key: jax.Array, embed_dim: int, hidden: int = 128) -> dict:
+    return materialize(surrogate_schema(embed_dim, hidden), key, jnp.float32)
+
+
+def surrogate_score(p: dict, emb: jax.Array) -> jax.Array:
+    """emb f32[..., E] → relevance score f32[...]."""
+    h = jax.nn.relu(emb @ p["w1"] + p["b1"])
+    h = jax.nn.relu(h @ p["w2"] + p["b2"])
+    return (h @ p["w3"] + p["b3"])[..., 0]
+
+
+def surrogate_loss(p: dict, emb: jax.Array, has_object: jax.Array) -> jax.Array:
+    """Binary cross-entropy against 'frame contains ≥1 query object'."""
+    logit = surrogate_score(p, emb)
+    z = jax.nn.log_sigmoid(logit)
+    zc = jax.nn.log_sigmoid(-logit)
+    y = has_object.astype(jnp.float32)
+    return -jnp.mean(y * z + (1 - y) * zc)
+
+
+def surrogate_flops(embed_dim: int, hidden: int = 128) -> float:
+    return 2.0 * (embed_dim * hidden + hidden * hidden + hidden)

@@ -1,0 +1,196 @@
+"""Shared neural building blocks + the parameter-schema system.
+
+Params are plain nested dicts of jnp arrays.  Every leaf is declared once
+via ``ParamSpec`` (shape, init, logical axes); ``materialize`` turns a
+schema into initialized params and ``logical_to_pspec`` turns the same
+schema into a ``PartitionSpec`` tree — a single source of truth for both,
+so sharding can never drift from the parameter layout.
+
+Logical axis names (mapped to mesh axes in ``repro.distributed.sharding``):
+  "embed"   — d_model                (replicated)
+  "heads"   — attention head blocks  (→ model)
+  "kv"      — kv head blocks         (→ model when divisible else None)
+  "mlp"     — FFN hidden             (→ model)
+  "vocab"   — vocabulary             (→ model)
+  "expert"  — MoE expert             (→ model)
+  "inner"   — SSM inner channels     (→ model)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]
+    init: str = "normal"           # normal | zeros | ones | embed_normal
+    scale: float = 1.0
+
+    def materialize(self, key: jax.Array, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[0], 1)
+        if self.init == "embed_normal":
+            # tied unembedding: rows ~ N(0, 1/d) keep init logits O(1)
+            std = 1.0 / math.sqrt(self.shape[-1])
+        else:
+            std = self.scale / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dtype)
+
+
+Schema = dict[str, Any]  # nested dict of ParamSpec
+
+
+def materialize(schema: Schema, key: jax.Array, dtype) -> dict:
+    """Initialize all params of a schema (deterministic per-path keys)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    leaves = []
+    for path, spec in flat:
+        path_str = "/".join(str(p) for p in path)
+        k = jax.random.fold_in(key, hash(path_str) % (2**31))
+        leaves.append(spec.materialize(k, dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_params(schema: Schema, dtype) -> dict:
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def count_params(schema: Schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np_prod(s.shape)) for s in leaves)
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 *accumulation* but no full-tensor f32 materialization
+    (a full-residual f32 copy per norm dominated backward memory at scale —
+    reductions carry the f32, elementwise math stays in x.dtype)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv * gamma.astype(x.dtype)
+
+
+def layernorm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    var = ms - mu * mu
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    mu = mu.astype(x.dtype)
+    return (x - mu) * inv * gamma.astype(x.dtype) + beta.astype(x.dtype)
+
+
+def norm_schema(cfg_norm: str, d: int) -> Schema:
+    if cfg_norm == "rmsnorm":
+        return {"gamma": ParamSpec((d,), ("embed",), init="ones")}
+    return {
+        "gamma": ParamSpec((d,), ("embed",), init="ones"),
+        "beta": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def apply_norm(cfg_norm: str, p: dict, x: jax.Array) -> jax.Array:
+    if cfg_norm == "rmsnorm":
+        return rmsnorm(x, p["gamma"])
+    return layernorm(x, p["gamma"], p["beta"])
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # f32[head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, D]; positions i32[..., S] (broadcastable).
+
+    cos/sin are cast to x.dtype *before* the product — mixing bf16
+    activations with f32 trig tables would promote the whole tensor.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,D/2]
+    cos = jnp.cos(angles).astype(x.dtype)
+    sin = jnp.sin(angles).astype(x.dtype)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLP / GLU
+# --------------------------------------------------------------------------
+
+def mlp_schema(d_model: int, d_ff: int, kind: str) -> Schema:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    return h @ p["w_down"]
+
+
+def mlp_flops(d_model: int, d_ff: int, kind: str, tokens: int) -> float:
+    mats = 3 if kind in ("swiglu", "geglu") else 2
+    return 2.0 * tokens * d_model * d_ff * mats
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_schema(vocab: int, d_model: int) -> Schema:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"), init="embed_normal")}
+
+
+def apply_embed(p: dict, tokens: jax.Array, d_model: int) -> jax.Array:
+    # gather; under vocab sharding GSPMD emits masked-gather + psum
+    return jnp.take(p["table"], tokens, axis=0) * (1.0 / math.sqrt(d_model))
+
+
+def apply_unembed(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["table"].T

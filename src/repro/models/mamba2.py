@@ -1,0 +1,233 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q; each
+chunk computes a quadratic *intra-chunk* term (the "attention-like" matrix
+masked by cumulative decay) plus a linear *inter-chunk* term propagated
+through a recurrent chunk state h ∈ [B, H, P, N].  The chunk loop is a
+``lax.scan`` at runtime and a Python loop under ``unroll=True`` for the
+dry-run (cost-analysis fidelity + per-chunk peak memory, mirroring
+``blocked_attention``).
+
+TP: heads shard over ``model`` (in_proj output-sharded, out_proj
+row-sharded with a psum); B/C projections use a single group (ngroups=1)
+and are replicated — they are O(S·N), negligible.  Decode is a single
+O(1) state update per token: the long_500k cell's whole point.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import ParamSpec, Schema
+
+
+def mamba_dims(d_model: int, cfg: SSMConfig) -> tuple[int, int, int]:
+    d_inner = cfg.expand * d_model
+    nheads = d_inner // cfg.head_dim
+    return d_inner, nheads, cfg.state_dim
+
+
+def mamba_schema(d_model: int, cfg: SSMConfig) -> Schema:
+    """Projections are split per component so each shards cleanly:
+    z/x/dt over ``inner`` (TP over SSM heads), B/C replicated (O(S·N))."""
+    d_inner, nheads, n = mamba_dims(d_model, cfg)
+    return {
+        "wz": ParamSpec((d_model, d_inner), ("embed", "inner")),
+        "wx": ParamSpec((d_model, d_inner), ("embed", "inner")),
+        "wbc": ParamSpec((d_model, 2 * n), ("embed", None)),
+        "wdt": ParamSpec((d_model, nheads), ("embed", "inner")),
+        "conv_x_w": ParamSpec((cfg.conv_width, d_inner), (None, "inner"), scale=1.0),
+        "conv_x_b": ParamSpec((d_inner,), ("inner",), init="zeros"),
+        "conv_bc_w": ParamSpec((cfg.conv_width, 2 * n), (None, None), scale=1.0),
+        "conv_bc_b": ParamSpec((2 * n,), (None,), init="zeros"),
+        "dt_bias": ParamSpec((nheads,), ("inner",), init="zeros"),
+        "a_log": ParamSpec((nheads,), ("inner",), init="ones"),
+        "d_skip": ParamSpec((nheads,), ("inner",), init="ones"),
+        "norm_g": ParamSpec((d_inner,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d_model), ("inner", "embed")),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # [B, W-1, conv_ch] — rolling conv window
+    ssm: jax.Array     # [B, H, P, N]      — recurrent state
+
+
+def init_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> MambaCache:
+    d_inner, nheads, n = mamba_dims(d_model, cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_inner + 2 * n), dtype),
+        ssm=jnp.zeros((batch, nheads, cfg.head_dim, n), jnp.float32),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: x [B,S,C], w [W,C] → [B,S,C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _project(params: dict, x: jax.Array):
+    """x [B,S,D] → (z, x_ssm, bc, dt) via the split projections."""
+    return x @ params["wz"], x @ params["wx"], x @ params["wbc"], x @ params["wdt"]
+
+
+def _chunk_terms(xh, dth, bmat, cmat, a_log):
+    """Per-chunk SSD terms.  xh [B,Q,H,P]; dth [B,Q,H]; bmat/cmat [B,Q,N].
+
+    Returns (y_intra [B,Q,H,P], chunk_state [B,H,P,N], decay_total [B,H],
+    decay_out [B,Q,H] — cumulative decay from chunk start to each position).
+    """
+    a = dth * (-jnp.exp(a_log))[None, None, :]              # [B,Q,H] log-decay ≤ 0
+    acs = jnp.cumsum(a, axis=1)                             # inclusive cumsum
+    # intra-chunk decay matrix L[t, s] = exp(acs_t - acs_s) for s ≤ t.
+    # Mask BEFORE the exp: for s > t, rel is positive and exp overflows —
+    # `where(tri, exp(rel), 0)` is forward-safe but leaks inf·0 = NaN into
+    # the backward (the classic where-grad trap).
+    rel = acs[:, :, None, :] - acs[:, None, :, :]           # [B,Q,Q,H]
+    q = xh.shape[1]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    rel = jnp.where(tri[None, :, :, None], rel, -jnp.inf)
+    l_mat = jnp.exp(rel)
+    scores = jnp.einsum("bqn,bsn->bqs", cmat, bmat)[..., None] * l_mat  # [B,Q,Q,H]
+    xdt = xh * dth[..., None]                               # [B,Q,H,P]
+    y_intra = jnp.einsum("bqsh,bshp->bqhp", scores, xdt)
+    # chunk state: sum_s exp(acs_last - acs_s) * B_s ⊗ (x_s dt_s)
+    decay_to_end = jnp.exp(acs[:, -1:, :] - acs)            # [B,Q,H]
+    state = jnp.einsum("bsh,bsn,bshp->bhpn", decay_to_end, bmat, xdt)
+    return y_intra, state, jnp.exp(acs[:, -1]), jnp.exp(acs)
+
+
+def ssd_scan(
+    x: jax.Array,          # [B, S, H, P]  (f32)
+    dt: jax.Array,         # [B, S, H]     (f32, post-softplus)
+    bmat: jax.Array,       # [B, S, N]
+    cmat: jax.Array,       # [B, S, N]
+    a_log: jax.Array,      # [H]
+    *,
+    chunk: int,
+    unroll: bool = False,
+    h0: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y [B,S,H,P] f32, final state [B,H,P,N])."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    h_state = h0 if h0 is not None else jnp.zeros((b, h, p, n), jnp.float32)
+
+    def one_chunk(h_state, xc, dtc, bc, cc):
+        y_intra, state_c, decay_tot, decay_out = _chunk_terms(xc, dtc, bc, cc, a_log)
+        # inter-chunk: y_t += C_t · (decay(0→t) * h_in)
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", cc, decay_out, h_state)
+        h_next = decay_tot[..., None, None] * h_state + state_c
+        return h_next, y_intra + y_inter
+
+    if unroll:
+        ys = []
+        for c in range(nc):
+            sl = slice(c * q, (c + 1) * q)
+            h_state, y = one_chunk(h_state, x[:, sl], dt[:, sl], bmat[:, sl], cmat[:, sl])
+            ys.append(y)
+        return jnp.concatenate(ys, axis=1), h_state
+
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    br = bmat.reshape(b, nc, q, n)
+    cr = cmat.reshape(b, nc, q, n)
+
+    def step(hs, c):
+        hs2, y = one_chunk(hs, xr[:, c], dtr[:, c], br[:, c], cr[:, c])
+        return hs2, y
+
+    h_state, ys = jax.lax.scan(step, h_state, jnp.arange(nc))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p), h_state
+
+
+def apply_mamba(
+    params: dict,
+    x: jax.Array,              # [B, S, D]
+    cfg: SSMConfig,
+    *,
+    unroll: bool = False,
+) -> jax.Array:
+    """Full Mamba-2 block (train/prefill)."""
+    b, s, d = x.shape
+    d_inner, nheads, n = mamba_dims(d, cfg)
+    z, xc, bc, dt = _project(params, x)
+    xc = _causal_conv(xc, params["conv_x_w"], params["conv_x_b"])
+    bc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"])
+    bmat, cmat = jnp.split(bc, [n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    xh = xc.reshape(b, s, nheads, cfg.head_dim).astype(jnp.float32)
+    y, _ = ssd_scan(
+        xh, dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        params["a_log"].astype(jnp.float32), chunk=cfg.chunk_len, unroll=unroll,
+    )
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (
+        yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+        * params["norm_g"].astype(jnp.float32)
+    ).astype(x.dtype)
+    return y @ params["out_proj"]
+
+
+def apply_mamba_decode(
+    params: dict,
+    x: jax.Array,              # [B, 1, D]
+    cache: MambaCache,
+    cfg: SSMConfig,
+) -> tuple[jax.Array, MambaCache]:
+    """Single-token Mamba-2 step with O(1) state."""
+    b, _, d = x.shape
+    d_inner, nheads, n = mamba_dims(d, cfg)
+    z, xc, bc, dt = _project(params, x)
+    xbc_new = jnp.concatenate([xc, bc], axis=-1)[:, 0]          # [B, C]
+    window = jnp.concatenate([cache.conv, xbc_new[:, None]], axis=1)  # [B, W, C]
+    conv_w = jnp.concatenate([params["conv_x_w"], params["conv_bc_w"]], axis=1)
+    conv_b = jnp.concatenate([params["conv_x_b"], params["conv_bc_b"]], axis=0)
+    conv_out = jnp.einsum("bwc,wc->bc", window, conv_w) + conv_b
+    xbc = jax.nn.silu(conv_out)
+    xc1, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt1 = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                           # [B,H]
+    a = jnp.exp(dt1 * (-jnp.exp(params["a_log"]))[None, :])     # [B,H] decay
+    xh = xc1.reshape(b, nheads, cfg.head_dim).astype(jnp.float32)
+    # h ← a·h + dt·(B ⊗ x)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, bmat.astype(jnp.float32), xh)
+    h_new = a[..., None, None] * cache.ssm + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat.astype(jnp.float32), h_new)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (
+        yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+        * params["norm_g"].astype(jnp.float32)
+    ).astype(x.dtype)
+    return y @ params["out_proj"], MambaCache(conv=window[:, 1:], ssm=h_new)
+
+
+def mamba_flops(tokens: int, d_model: int, cfg: SSMConfig) -> float:
+    """Analytic FLOPs per token span (projections + SSD terms)."""
+    d_inner, nheads, n = mamba_dims(d_model, cfg)
+    proj = 2.0 * tokens * d_model * (2 * d_inner + 2 * n + nheads)
+    out = 2.0 * tokens * d_inner * d_model
+    q = cfg.chunk_len
+    intra = 2.0 * tokens * q * (n + nheads * cfg.head_dim)   # scores + apply
+    inter = 4.0 * tokens * n * d_inner                        # state build + read
+    return proj + out + intra + inter

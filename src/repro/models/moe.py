@@ -1,0 +1,174 @@
+"""Mixture-of-Experts block: grouped top-k routing with capacity dispatch.
+
+Distribution model (DESIGN.md §5): tokens are pre-grouped into G groups
+(G = number of data shards, supplied by the launcher) so every dispatch
+cumsum/gather/scatter is *group-local* — no cross-shard index math.  Expert
+weights live on the ``model`` axis (expert parallelism); activations enter
+replicated over ``model``, each shard routes redundantly (deterministic,
+cheap: T·E f32 matmul) and computes only its local experts; the combine
+scatter-add carries a psum over ``model`` inserted by GSPMD.  Collective
+traffic per MoE layer is therefore one bf16 psum of the token activations —
+identical shape to a TP FFN combine, no all-to-all required.
+
+Capacity semantics follow GShard/Switch: per-group per-expert capacity
+C = ceil(T_g · top_k / E · capacity_factor); overflowing tokens are dropped
+from that expert (combine weight 0), underflow slots are masked.  The
+router runs in f32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import shard_hint
+from repro.models.layers import ParamSpec, Schema, apply_mlp
+
+
+def moe_schema(d_model: int, cfg: MoEConfig, mlp_kind: str) -> Schema:
+    e, f = cfg.num_experts, cfg.d_ff
+    schema: Schema = {
+        "router": ParamSpec((d_model, e), ("embed", None), scale=0.1),
+    }
+    # 2-D weight sharding: experts over ``model`` (EP) + FFN width over
+    # ``data`` (FSDP/ZeRO-3 gather-on-use) — expert weights are too large
+    # for a single mesh axis on the ≥100B MoEs (DESIGN.md §5).
+    if mlp_kind in ("swiglu", "geglu"):
+        schema.update(
+            w_gate=ParamSpec((e, d_model, f), ("expert", "embed", "expert_ff")),
+            w_up=ParamSpec((e, d_model, f), ("expert", "embed", "expert_ff")),
+            w_down=ParamSpec((e, f, d_model), ("expert", "expert_ff", "embed")),
+        )
+    else:
+        schema.update(
+            w_up=ParamSpec((e, d_model, f), ("expert", "embed", "expert_ff")),
+            w_down=ParamSpec((e, f, d_model), ("expert", "expert_ff", "embed")),
+        )
+    return schema
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jax.Array        # Switch load-balancing loss (scalar)
+    dropped_fraction: jax.Array
+
+
+def capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = math.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(int(c), 1)
+
+
+def apply_moe(
+    params: dict,
+    x: jax.Array,                  # [G, T, D] — pre-grouped tokens
+    cfg: MoEConfig,
+    *,
+    mlp_kind: str,
+    router_key: jax.Array | None = None,
+    token_exchange: bool = False,
+) -> tuple[jax.Array, MoEStats]:
+    g, t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(t, cfg)
+
+    # ---- routing (f32 accumulation, bf16 operands — no full f32 copy of x)
+    logits = jnp.einsum(
+        "gtd,de->gte", x, params["router"], preferred_element_type=jnp.float32
+    )
+    if cfg.router_jitter and router_key is not None:
+        logits += cfg.router_jitter * jax.random.normal(router_key, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)                     # [G,T,E]
+    top_p, top_e = jax.lax.top_k(probs, k)                      # [G,T,K]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # ---- capacity positions (group-local cumsum) ---------------------------
+    # flatten (T,K) token-major so earlier tokens win capacity
+    flat_e = top_e.reshape(g, t * k)                            # [G,TK]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # [G,TK,E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot                   # rank within expert
+    flat_pos = jnp.sum(pos * onehot, axis=-1)                   # [G,TK]
+    keep = flat_pos < c                                         # capacity mask
+
+    # ---- dispatch: gather tokens into [G, E, C, D] -------------------------
+    # slot owner: for each (expert, slot) find the source flat index.
+    slot_id = flat_e * c + jnp.minimum(flat_pos, c - 1)         # [G,TK]
+    slot_id = jnp.where(keep, slot_id, e * c)                   # dropped → pad slot
+    src = jnp.full((g, e * c + 1), t * k, jnp.int32)
+    src = jax.vmap(lambda s, sl: s.at[sl].set(jnp.arange(t * k, dtype=jnp.int32)))(
+        src, slot_id
+    )[:, : e * c]                                               # [G,EC]
+    token_of_flat = jnp.arange(t * k, dtype=jnp.int32) // k
+    src_token = jnp.where(src < t * k, token_of_flat[src], t)   # [G,EC]; t = pad row
+    x_pad = jnp.concatenate([x, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        x_pad, src_token[..., None], axis=1
+    ).reshape(g, e, c, d)                                       # [G,E,C,D]
+    if token_exchange:
+        # EP moves TOKENS: dispatch buffers replicate over `data` so the
+        # expert matmuls can keep F data-sharded — weights never gather.
+        xe = shard_hint(xe, None, "expert", None, None)
+    else:
+        xe = shard_hint(xe, "dp", "expert", None, None)
+
+    # ---- expert FFN (batched over G, E; experts sharded over model) --------
+    def expert_ffn(xe_):
+        hint_h = (
+            (lambda t: shard_hint(t, None, "expert", None, "expert_ff"))
+            if token_exchange
+            else (lambda t: t)
+        )
+        if mlp_kind in ("swiglu", "geglu"):
+            act = jax.nn.silu if mlp_kind == "swiglu" else (
+                lambda u: jax.nn.gelu(u, approximate=True)
+            )
+            h = act(
+                hint_h(jnp.einsum("gecd,edf->gecf", xe_, params["w_gate"]))
+            ) * hint_h(jnp.einsum("gecd,edf->gecf", xe_, params["w_up"]))
+        else:
+            h = jax.nn.gelu(
+                hint_h(jnp.einsum("gecd,edf->gecf", xe_, params["w_up"])),
+                approximate=True,
+            )
+        return jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+
+    ye = expert_ffn(xe)                                         # [G,E,C,D]
+
+    # ---- combine: per-expert scatter slabs, then reduce over E -------------
+    # A single scatter-add with model-sharded updates makes GSPMD all-gather
+    # the expert outputs (8 GiB/layer on dbrx); batching the scatter per
+    # expert keeps it local to each model shard, and the Σ over the sharded
+    # E axis lowers to one psum — the intended TP-style combine.
+    w_flat = (top_p.reshape(g, t * k) * keep).astype(ye.dtype)  # [G,TK]
+    slot_valid = src < t * k                                    # [G,EC]
+    w_slots = jnp.where(
+        slot_valid, jnp.take_along_axis(w_flat, jnp.minimum(src, t * k - 1), axis=1), 0.0
+    )
+    contrib = ye * w_slots.reshape(g, e, c)[..., None]          # [G,E,C,D]
+    # combine always runs with G data-sharded: in token-exchange mode the
+    # small contrib buffer reshards back (O(C·D) traffic — the "return
+    # leg" of the token exchange); replicated (G,E,T,D) slabs would not fit
+    contrib = shard_hint(contrib, "dp", "expert", None, None)
+    tgt = src_token.reshape(g, e, c)                            # [G,E,C] (t = pad)
+    out_e = jnp.zeros((g, e, t + 1, d), ye.dtype)
+    out_e = jax.vmap(jax.vmap(lambda o, idx, u: o.at[idx].add(u)))(out_e, tgt, contrib)
+    out_e = shard_hint(out_e, "dp", "expert", None, None)
+    out = jnp.sum(out_e[:, :, :t], axis=1)                      # psum over model
+
+    # ---- diagnostics --------------------------------------------------------
+    frac_per_expert = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_per_expert * mean_prob)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return out.astype(x.dtype), MoEStats(aux_loss=aux, dropped_fraction=dropped)
+
+
+def moe_flops(tokens: int, d_model: int, cfg: MoEConfig, mlp_kind: str) -> float:
+    """Active-expert FLOPs (the MODEL_FLOPS convention: 6·N_active·D uses
+    top_k experts per token; capacity padding is HLO overhead, not model
+    FLOPs)."""
+    mats = 3 if mlp_kind in ("swiglu", "geglu") else 2
+    return 2.0 * tokens * cfg.top_k * d_model * cfg.d_ff * mats

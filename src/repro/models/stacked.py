@@ -1,0 +1,141 @@
+"""Scan-over-layers forward with stacked parameters (memory-fidelity path).
+
+The dry-run lowers each cell twice (DESIGN.md §6):
+  * cost config   — Python-unrolled layers: HloCostAnalysis sees every FLOP.
+  * memory config — this module: layers stacked into groups of one pattern
+    period and iterated with ``lax.scan`` + per-group ``jax.checkpoint``,
+    which forces buffer reuse across layers so ``memory_analysis`` reports
+    the *schedulable* peak (XLA:CPU's list scheduler keeps all unrolled
+    layers' backward transients live otherwise — measured 13 GiB/layer).
+
+Heterogeneous stacks (jamba's mamba/attn interleave, MoE every k-th layer)
+are handled by grouping: the layer-type pattern of every assigned arch is
+periodic, so a group of ``pattern_period`` layers is homogeneous across
+groups and stacks cleanly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.layers import ParamSpec, Schema, apply_norm, apply_unembed
+from repro.models.transformer import (
+    _decoder_layer,
+    _cross_kv,
+    _encoder_layer_schema,
+    _decoder_layer_schema,
+    embed_tokens,
+    embed_vlm,
+    encoder_forward,
+)
+from repro.distributed.sharding import shard_hint
+
+
+def pattern_period(cfg: ModelConfig) -> int:
+    """Smallest p such that layer schemas repeat with period p."""
+    p = 1
+    if cfg.attn_every_k > 1:
+        p = cfg.attn_every_k
+    if cfg.moe is not None and cfg.moe.every_k_layers > 1:
+        p = math.lcm(p, cfg.moe.every_k_layers)
+    return p
+
+
+def stack_schema(cfg: ModelConfig) -> tuple[Schema, int, int]:
+    """Returns (schema, group_size, num_groups).  Layer params live under
+    ``groups/pos_<j>`` with a leading (num_groups,) stack dim."""
+    gs = pattern_period(cfg)
+    assert cfg.num_layers % gs == 0, (cfg.num_layers, gs)
+    ng = cfg.num_layers // gs
+
+    def stack(spec: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            (ng,) + spec.shape, (None,) + spec.logical, init=spec.init,
+            scale=spec.scale,
+        )
+
+    from repro.models.layers import embed_schema, norm_schema
+
+    s: Schema = {"embed": embed_schema(cfg.vocab, cfg.d_model)}
+    if cfg.num_patches and cfg.patch_dim:
+        s["patch_proj"] = {
+            "w": ParamSpec((cfg.patch_dim, cfg.d_model), (None, "embed")),
+            "b": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        }
+    s["groups"] = {
+        f"pos_{j}": jax.tree.map(
+            stack,
+            _decoder_layer_schema(cfg, j),
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        for j in range(gs)
+    }
+    s["norm_f"] = norm_schema(cfg.norm, cfg.d_model)
+    for i in range(cfg.encoder_layers):
+        s[f"enc_{i}"] = _encoder_layer_schema(cfg)
+    if cfg.encoder_layers:
+        s["enc_norm_f"] = norm_schema(cfg.norm, cfg.d_model)
+    return s, gs, ng
+
+
+def forward_lm_stacked(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    run: RunConfig,
+    *,
+    mode: str = "train",
+    moe_groups: int = 1,
+    last_only: bool = False,
+) -> jax.Array:
+    """Same semantics as ``forward_lm`` but layers run under lax.scan."""
+    if cfg.family == "vlm":
+        x = embed_vlm(params, batch["tokens"], batch["patches"], cfg)
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+    cross_out = None
+    if cfg.encoder_layers:
+        cross_out = encoder_forward(params, batch["frames"], cfg, run)
+    positions = jnp.arange(x.shape[1])[None, :]
+    gs = pattern_period(cfg)
+
+    def group_body(x, gp):
+        # pin the per-iteration parameter slices: without the barrier,
+        # XLA:CPU hoists the FSDP all-gather of expert weights above the
+        # while loop (gather-then-slice), materializing every layer's
+        # gathered weights at once — observed 37 GiB → 6 TiB blowups on
+        # the MoE cells.  The barrier keeps gathers loop-variant.
+        gp = jax.lax.optimization_barrier(gp)
+        for j in range(gs):
+            pl = gp[f"pos_{j}"]
+            cross_kv = (
+                _cross_kv(pl["cross"], cross_out, cfg)
+                if cross_out is not None
+                else None
+            )
+            x = _decoder_layer(
+                pl, x, cfg, run, j,
+                positions=positions, cross_kv=cross_kv,
+                moe_groups=moe_groups,
+                seq_shard=run.sequence_parallel,
+            )
+        return x
+
+    body = group_body
+    if mode == "train" and run.remat:
+        body = jax.checkpoint(group_body)
+
+    def scan_step(x, gp):
+        return body(x, gp), None
+
+    x, _ = jax.lax.scan(scan_step, x, params["groups"])
+    x = apply_norm(cfg.norm, params["norm_f"], x)
+    if last_only:
+        x = x[:, -1:]
+    x = shard_hint(x, "dp", None, None)
+    logits = apply_unembed(params["embed"], x)
+    return shard_hint(logits, "dp", None, "vocab")

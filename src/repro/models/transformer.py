@@ -1,0 +1,486 @@
+"""Unified backbone covering all assigned architecture families.
+
+One schema/forward pair handles dense (phi3/qwen/granite/gemma), MoE
+(dbrx/granite-moe), hybrid (jamba: mamba↔attn interleave + MoE), pure SSM
+(mamba2), VLM (phi3-vision: patch-embedding stub frontend) and enc-dec
+audio (whisper: frame-embedding stub frontend + cross-attention).
+
+Layer parameters are stored per-layer (``layer_<i>``) and the layer loop
+is a Python loop: heterogeneous stacks (hybrid) stay trivial, and XLA's
+cost analysis sees every layer (``lax.scan`` bodies are counted once — see
+DESIGN.md §6).  Compile cost is bounded because runtime paths only ever
+build reduced configs on CPU; full configs exist solely through the
+dry-run, which wants the unrolled HLO anyway.
+
+All sharding is expressed through logical ``shard_hint``s — no mesh axis
+names appear here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import shard_hint
+from repro.models import mamba2
+from repro.models.attention import (
+    blocked_attention,
+    decode_attention,
+    repeat_kv,
+)
+from repro.models.layers import (
+    ParamSpec,
+    Schema,
+    apply_embed,
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    apply_unembed,
+    embed_schema,
+    materialize,
+    mlp_schema,
+    norm_schema,
+)
+from repro.models.moe import apply_moe, moe_schema
+
+
+# --------------------------------------------------------------------------
+# schema
+# --------------------------------------------------------------------------
+
+def _attn_schema(cfg: ModelConfig, *, cross: bool = False) -> Schema:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s: Schema = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, kv * hd), ("embed", "kv")),
+        "wv": ParamSpec((d, kv * hd), ("embed", "kv")),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        s.update(
+            bq=ParamSpec((h * hd,), ("heads",), init="zeros"),
+            bk=ParamSpec((kv * hd,), ("kv",), init="zeros"),
+            bv=ParamSpec((kv * hd,), ("kv",), init="zeros"),
+        )
+    return s
+
+
+def _decoder_layer_schema(cfg: ModelConfig, layer: int) -> Schema:
+    s: Schema = {"norm1": norm_schema(cfg.norm, cfg.d_model)}
+    if cfg.is_attn_layer(layer):
+        s["attn"] = _attn_schema(cfg)
+    else:
+        s["mamba"] = mamba2.mamba_schema(cfg.d_model, cfg.ssm)
+    if cfg.cross_attention:
+        s["norm_x"] = norm_schema(cfg.norm, cfg.d_model)
+        s["cross"] = _attn_schema(cfg, cross=True)
+    if cfg.is_moe_layer(layer):
+        s["norm2"] = norm_schema(cfg.norm, cfg.d_model)
+        s["moe"] = moe_schema(cfg.d_model, cfg.moe, cfg.mlp)
+    elif cfg.d_ff > 0:
+        s["norm2"] = norm_schema(cfg.norm, cfg.d_model)
+        s["mlp"] = mlp_schema(cfg.d_model, cfg.d_ff, cfg.mlp)
+    return s
+
+
+def _encoder_layer_schema(cfg: ModelConfig) -> Schema:
+    return {
+        "norm1": norm_schema(cfg.norm, cfg.d_model),
+        "attn": _attn_schema(cfg),
+        "norm2": norm_schema(cfg.norm, cfg.d_model),
+        "mlp": mlp_schema(cfg.d_model, cfg.d_ff, cfg.mlp),
+    }
+
+
+def backbone_schema(cfg: ModelConfig) -> Schema:
+    s: Schema = {"embed": embed_schema(cfg.vocab, cfg.d_model)}
+    if cfg.num_patches and cfg.patch_dim:
+        s["patch_proj"] = {
+            "w": ParamSpec((cfg.patch_dim, cfg.d_model), (None, "embed")),
+            "b": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        }
+    for i in range(cfg.num_layers):
+        s[f"layer_{i}"] = _decoder_layer_schema(cfg, i)
+    s["norm_f"] = norm_schema(cfg.norm, cfg.d_model)
+    for i in range(cfg.encoder_layers):
+        s[f"enc_{i}"] = _encoder_layer_schema(cfg)
+    if cfg.encoder_layers:
+        s["enc_norm_f"] = norm_schema(cfg.norm, cfg.d_model)
+    return s
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    return materialize(backbone_schema(cfg), key, dtype)
+
+
+def pad_heads(cfg: ModelConfig, multiple: int) -> ModelConfig:
+    """Round head counts up so TP sharding divides (DESIGN.md §5).
+
+    Padded heads are dead weight zero-initialized in ``wo`` rows — outputs
+    are exact; the FLOP overhead is reported by the roofline's useful-FLOPs
+    ratio.
+    """
+    def up(x: int) -> int:
+        return -(-x // multiple) * multiple
+
+    h = up(cfg.num_heads)
+    if h == cfg.num_heads:
+        return cfg
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    # keep GQA ratio integral: pad kv so h % kv == 0
+    while h % kv:
+        kv += 1
+    return dataclasses.replace(cfg, num_heads=h, num_kv_heads=kv, head_dim=hd)
+
+
+def pad_vocab(cfg: ModelConfig, multiple: int) -> ModelConfig:
+    """Round vocab up so the embedding/logits shard (padded ids unused)."""
+    v = -(-cfg.vocab // multiple) * multiple
+    return cfg if v == cfg.vocab else dataclasses.replace(cfg, vocab=v)
+
+
+# --------------------------------------------------------------------------
+# sublayers
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array     # [B, T, KV, hd]
+    v: jax.Array
+
+
+def _qkv(p: dict, h_in: jax.Array, cfg: ModelConfig):
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b, s, _ = h_in.shape
+    q = h_in @ p["wq"]
+    k = h_in @ p["wk"]
+    v = h_in @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(b, s, h, hd),
+        k.reshape(b, s, kv, hd),
+        v.reshape(b, s, kv, hd),
+    )
+
+
+def _self_attention(
+    p: dict,
+    x_norm: jax.Array,
+    cfg: ModelConfig,
+    run: RunConfig,
+    *,
+    causal: bool,
+    positions: jax.Array,
+) -> jax.Array:
+    q, k, v = _qkv(p, x_norm, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = repeat_kv(k, cfg.num_heads)
+    v = repeat_kv(v, cfg.num_heads)
+    # sharding note: q/k/v inherit head sharding from the projection weights
+    # (GSPMD propagation); explicit hints here caused reshard thrash when
+    # kv_heads < model shards, so only q (always divisible) is pinned.
+    q = shard_hint(q, "dp", None, "heads", None)
+    import jax.numpy as _jnp
+
+    o = blocked_attention(
+        q, k, v,
+        causal=causal,
+        block_q=run.block_q,
+        block_kv=run.block_kv,
+        causal_skip=run.causal_block_skip,
+        unroll=run.unroll,
+        probs_dtype=_jnp.bfloat16 if run.probs_bf16 else _jnp.float32,
+    )
+    b, s = o.shape[:2]
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def _cross_attention(
+    p: dict, x_norm: jax.Array, cross_kv: KVCache, cfg: ModelConfig, run: RunConfig
+) -> jax.Array:
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    b, s, _ = x_norm.shape
+    q = (x_norm @ p["wq"]).reshape(b, s, h, hd)
+    k = repeat_kv(cross_kv.k, h)
+    v = repeat_kv(cross_kv.v, h)
+    o = blocked_attention(
+        q, k, v, causal=False,
+        block_q=run.block_q, block_kv=run.block_kv, unroll=run.unroll,
+    )
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def _cross_kv(p: dict, enc_out: jax.Array, cfg: ModelConfig) -> KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    b, t, _ = enc_out.shape
+    return KVCache(
+        k=(enc_out @ p["wk"]).reshape(b, t, kv, hd),
+        v=(enc_out @ p["wv"]).reshape(b, t, kv, hd),
+    )
+
+
+def _ffn(pl: dict, x: jax.Array, cfg: ModelConfig, layer: int, run: RunConfig,
+         moe_groups: int):
+    """Post-mixer feed-forward sublayer (dense MLP or MoE), with residual."""
+    if cfg.is_moe_layer(layer):
+        h = apply_norm(cfg.norm, pl["norm2"], x)
+        b, s, d = h.shape
+        g = max(min(moe_groups, b * s), 1)
+        tokens = h.reshape(g, (b * s) // g, d)
+        tokens = shard_hint(tokens, "dp", None, None)
+        y, _stats = apply_moe(
+            pl["moe"], tokens, cfg.moe, mlp_kind=cfg.mlp,
+            token_exchange=run.moe_token_exchange,
+        )
+        y = shard_hint(y, "dp", None, None)
+        return x + y.reshape(b, s, d)
+    if "mlp" in pl:
+        h = apply_norm(cfg.norm, pl["norm2"], x)
+        return x + apply_mlp(pl["mlp"], h, cfg.mlp)
+    return x
+
+
+def _decoder_layer(
+    pl: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    run: RunConfig,
+    layer: int,
+    *,
+    positions: jax.Array,
+    cross_kv: Optional[KVCache],
+    moe_groups: int,
+    seq_shard: bool,
+) -> jax.Array:
+    if seq_shard:
+        x = shard_hint(x, "dp", "seq", None)
+    h = apply_norm(cfg.norm, pl["norm1"], x)
+    if cfg.is_attn_layer(layer):
+        x = x + _self_attention(pl["attn"], h, cfg, run, causal=True, positions=positions)
+    else:
+        x = x + mamba2.apply_mamba(pl["mamba"], h, cfg.ssm, unroll=run.unroll)
+    if cross_kv is not None and cfg.cross_attention:
+        hx = apply_norm(cfg.norm, pl["norm_x"], x)
+        x = x + _cross_attention(pl["cross"], hx, cross_kv, cfg, run)
+    x = _ffn(pl, x, cfg, layer, run, moe_groups)
+    if seq_shard:
+        x = shard_hint(x, "dp", "seq", None)
+    return x
+
+
+# --------------------------------------------------------------------------
+# embedding frontends
+# --------------------------------------------------------------------------
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = apply_embed(params["embed"], tokens, cfg.d_model)
+    return shard_hint(x, "dp", None, None)
+
+
+def embed_vlm(
+    params: dict, tokens: jax.Array, patches: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """VLM stub frontend: precomputed patch embeddings → linear proj,
+    prepended to the token embedding sequence."""
+    tok = apply_embed(params["embed"], tokens, cfg.d_model)
+    img = patches @ params["patch_proj"]["w"] + params["patch_proj"]["b"]
+    x = jnp.concatenate([img.astype(tok.dtype), tok], axis=1)
+    return shard_hint(x, "dp", None, None)
+
+
+# --------------------------------------------------------------------------
+# full forward passes
+# --------------------------------------------------------------------------
+
+def encoder_forward(
+    params: dict, frames: jax.Array, cfg: ModelConfig, run: RunConfig
+) -> jax.Array:
+    """Bidirectional encoder over stub frame embeddings [B, T, D]."""
+    x = shard_hint(frames, "dp", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+    for i in range(cfg.encoder_layers):
+        pl = params[f"enc_{i}"]
+        h = apply_norm(cfg.norm, pl["norm1"], x)
+        x = x + _self_attention(pl["attn"], h, cfg, run, causal=False, positions=positions)
+        h = apply_norm(cfg.norm, pl["norm2"], x)
+        x = x + apply_mlp(pl["mlp"], h, cfg.mlp)
+    return apply_norm(cfg.norm, params["enc_norm_f"], x)
+
+
+def forward_lm(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    run: RunConfig,
+    *,
+    mode: str = "train",          # train | prefill
+    moe_groups: int = 1,
+    last_only: bool = False,      # unembed only the final position (serving)
+) -> jax.Array:
+    """Causal LM forward → logits [B, S, V].
+
+    batch keys by family: "tokens" (all), "patches" (vlm),
+    "frames" (audio encoder input).
+    """
+    if cfg.family == "vlm":
+        x = embed_vlm(params, batch["tokens"], batch["patches"], cfg)
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+
+    cross_out = None
+    if cfg.encoder_layers:
+        cross_out = encoder_forward(params, batch["frames"], cfg, run)
+
+    positions = jnp.arange(x.shape[1])[None, :]
+    seq_shard = mode == "train" and run.sequence_parallel
+
+    def layer_fn(pl, x, i, cross_kv):
+        return _decoder_layer(
+            pl, x, cfg, run, i,
+            positions=positions,
+            cross_kv=cross_kv,
+            moe_groups=moe_groups,
+            seq_shard=seq_shard,
+        )
+
+    for i in range(cfg.num_layers):
+        pl = params[f"layer_{i}"]
+        cross_kv = _cross_kv(pl["cross"], cross_out, cfg) if cross_out is not None else None
+        if mode == "train" and run.remat:
+            x = jax.checkpoint(
+                lambda pl_, x_, ck_: layer_fn(pl_, x_, i, ck_),
+                static_argnums=(),
+            )(pl, x, cross_kv)
+        else:
+            x = layer_fn(pl, x, i, cross_kv)
+
+    x = apply_norm(cfg.norm, params["norm_f"], x)
+    if last_only:
+        x = x[:, -1:]              # only the next-token position matters
+    x = shard_hint(x, "dp", None, None)
+    logits = apply_unembed(params["embed"], x)
+    return shard_hint(logits, "dp", None, "vocab")
+
+
+# --------------------------------------------------------------------------
+# decode path (serve_step)
+# --------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Per-layer caches + current length (uniform across batch)."""
+
+    layers: tuple          # per layer: KVCache | MambaCache | None-cross pairs
+    cross: tuple           # per layer: KVCache | None
+    pos: jax.Array         # i32[] — tokens already in cache
+
+
+def init_decode_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> DecodeCache:
+    kv = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim if cfg.num_heads else 0
+    layers, cross = [], []
+    for i in range(cfg.num_layers):
+        if cfg.is_attn_layer(i):
+            layers.append(
+                KVCache(
+                    k=jnp.zeros((batch, max_len, kv, hd), dtype),
+                    v=jnp.zeros((batch, max_len, kv, hd), dtype),
+                )
+            )
+        else:
+            layers.append(mamba2.init_cache(batch, cfg.d_model, cfg.ssm, dtype))
+        if cfg.cross_attention:
+            cross.append(
+                KVCache(
+                    k=jnp.zeros((batch, cfg.encoder_len, kv, hd), dtype),
+                    v=jnp.zeros((batch, cfg.encoder_len, kv, hd), dtype),
+                )
+            )
+        else:
+            cross.append(None)
+    return DecodeCache(layers=tuple(layers), cross=tuple(cross),
+                       pos=jnp.zeros((), jnp.int32))
+
+
+def abstract_decode_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """ShapeDtypeStruct cache for dry-run lowering."""
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, batch, max_len, dtype)
+    )
+
+
+def forward_decode(
+    params: dict,
+    token: jax.Array,          # i32[B, 1]
+    cache: DecodeCache,
+    cfg: ModelConfig,
+    run: RunConfig,
+    *,
+    moe_groups: int = 1,
+) -> tuple[jax.Array, DecodeCache]:
+    """One autoregressive step.  Returns (logits [B, V], updated cache)."""
+    b = token.shape[0]
+    x = embed_tokens(params, token, cfg)
+    pos = cache.pos
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    new_layers = []
+    for i in range(cfg.num_layers):
+        pl = params[f"layer_{i}"]
+        h = apply_norm(cfg.norm, pl["norm1"], x)
+        if cfg.is_attn_layer(i):
+            q, k_new, v_new = _qkv(pl["attn"], h, cfg)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+            kc: KVCache = cache.layers[i]
+            k_cache = jax.lax.dynamic_update_slice(
+                kc.k, k_new.astype(kc.k.dtype), (0, pos, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                kc.v, v_new.astype(kc.v.dtype), (0, pos, 0, 0)
+            )
+            k_cache = shard_hint(k_cache, "dp", "seq", None, None)
+            v_cache = shard_hint(v_cache, "dp", "seq", None, None)
+            o = decode_attention(
+                q, k_cache, v_cache,
+                cache_len=jnp.full((b,), pos + 1, jnp.int32),
+            )
+            x = x + o.reshape(b, 1, -1) @ pl["attn"]["wo"]
+            new_layers.append(KVCache(k=k_cache, v=v_cache))
+        else:
+            y, mc = mamba2.apply_mamba_decode(pl["mamba"], h, cache.layers[i], cfg.ssm)
+            x = x + y
+            new_layers.append(mc)
+        if cfg.cross_attention and cache.cross[i] is not None:
+            hx = apply_norm(cfg.norm, pl["norm_x"], x)
+            ckv = cache.cross[i]
+            o = decode_attention(
+                (hx @ pl["cross"]["wq"]).reshape(b, 1, cfg.num_heads, cfg.resolved_head_dim),
+                ckv.k, ckv.v,
+            )
+            x = x + o.reshape(b, 1, -1) @ pl["cross"]["wo"]
+        x = _ffn(pl, x, cfg, i, run, moe_groups)
+    x = apply_norm(cfg.norm, params["norm_f"], x)
+    logits = apply_unembed(params["embed"], x)[:, 0]
+    logits = shard_hint(logits, "dp", "vocab")
+    return logits, DecodeCache(
+        layers=tuple(new_layers), cross=cache.cross, pos=pos + 1
+    )
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy in f32 (vocab axis may be sharded)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

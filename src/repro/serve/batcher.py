@@ -1,0 +1,82 @@
+"""Request batcher for the detector serving path.
+
+ExSample produces cohorts of frame ids; real deployments also take ad-hoc
+detection requests.  The batcher merges both into fixed-size device
+batches (static shapes ⇒ one compilation), padding with sentinel frames
+whose results are dropped.  It also implements the straggler policy from
+DESIGN.md §5: a cohort is *never* a barrier — late frames just join a
+later batch, which is sound because sampler updates commute (§3.7.1).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PendingFrame:
+    frame_id: int
+    chunk_id: int
+    cohort: int
+    enqueue_round: int
+
+
+@dataclasses.dataclass
+class Batch:
+    frame_ids: np.ndarray     # i64[B] (sentinel = -1 padding)
+    chunk_ids: np.ndarray     # i64[B]
+    valid: np.ndarray         # bool[B]
+    cohorts: np.ndarray       # i64[B]
+
+
+class RequestBatcher:
+    def __init__(self, batch_size: int, *, max_wait_rounds: int = 0):
+        self.batch_size = batch_size
+        self.max_wait_rounds = max_wait_rounds
+        self._queue: collections.deque[PendingFrame] = collections.deque()
+        self._round = 0
+        self.stats = {"batches": 0, "padded_slots": 0, "frames": 0}
+
+    def submit(self, frame_ids: Iterable[int], chunk_ids: Iterable[int], cohort: int) -> None:
+        for f, c in zip(frame_ids, chunk_ids):
+            self._queue.append(PendingFrame(int(f), int(c), cohort, self._round))
+
+    def ready(self) -> bool:
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.batch_size:
+            return True
+        oldest = self._queue[0].enqueue_round
+        return (self._round - oldest) >= self.max_wait_rounds
+
+    def next_batch(self) -> Optional[Batch]:
+        """Emit up to batch_size frames, padding the remainder."""
+        self._round += 1
+        if not self._queue:
+            return None
+        take = min(self.batch_size, len(self._queue))
+        items = [self._queue.popleft() for _ in range(take)]
+        pad = self.batch_size - take
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += pad
+        self.stats["frames"] += take
+        return Batch(
+            frame_ids=np.asarray(
+                [i.frame_id for i in items] + [-1] * pad, np.int64
+            ),
+            chunk_ids=np.asarray(
+                [i.chunk_id for i in items] + [-1] * pad, np.int64
+            ),
+            valid=np.asarray([True] * take + [False] * pad, bool),
+            cohorts=np.asarray([i.cohort for i in items] + [-1] * pad, np.int64),
+        )
+
+    @property
+    def occupancy(self) -> float:
+        b = self.stats["batches"]
+        if not b:
+            return 1.0
+        return self.stats["frames"] / (b * self.batch_size)

@@ -1,0 +1,97 @@
+"""Serving steps: prefill, decode, and the detector step for ExSample.
+
+These are the production inference paths the dry-run lowers:
+
+  * ``build_prefill_step``  — full-context forward returning last-position
+    logits + populated KV caches (the ``prefill_32k`` cell).
+  * ``build_decode_step``   — one autoregressive token against a KV cache
+    of the assigned length (``decode_32k`` / ``long_500k`` cells).
+  * ``build_detect_step``   — frames → backbone → detection head → boxes;
+    the step the ExSample search loop calls per cohort batch.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.detection import apply_head, pool_features
+from repro.models.transformer import (
+    DecodeCache,
+    forward_decode,
+    forward_lm,
+)
+
+
+def build_prefill_step(cfg: ModelConfig, run: RunConfig, *, moe_groups: int = 1):
+    def prefill(params: dict, batch: dict) -> jax.Array:
+        if run.stacked:
+            from repro.models.stacked import forward_lm_stacked as fwd
+        else:
+            fwd = forward_lm
+        logits = fwd(
+            params, batch, cfg, run, mode="prefill", moe_groups=moe_groups,
+            last_only=True,
+        )
+        return logits[:, -1]          # next-token logits
+
+    return prefill
+
+
+def build_decode_step(cfg: ModelConfig, run: RunConfig, *, moe_groups: int = 1):
+    def decode(params: dict, token: jax.Array, cache: DecodeCache):
+        logits, cache = forward_decode(
+            params, token, cache, cfg, run, moe_groups=moe_groups
+        )
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, cache
+
+    return decode
+
+
+def build_detect_step(
+    cfg: ModelConfig,
+    run: RunConfig,
+    *,
+    max_dets: int,
+    num_classes: int,
+    feat_dim: int,
+    moe_groups: int = 1,
+) -> Callable:
+    """frames [B, S, D_embed-as-tokens…] → detections.
+
+    The frame enters as a short token sequence (patch embeddings for vlm,
+    frame embedding tiled otherwise); backbone features are pooled and the
+    detection head emits fixed slots.  Used by examples + the search
+    driver; statically shaped so one compilation serves the whole query.
+    """
+    # Detection consumes backbone *features* (pre-unembed), so it drives
+    # the layer stack directly rather than going through forward_lm.
+    from repro.models.transformer import embed_tokens, embed_vlm, _decoder_layer
+    from repro.models.layers import apply_norm
+
+    def detect_features(params: dict, batch: dict) -> jax.Array:
+        if cfg.family == "vlm":
+            x = embed_vlm(params, batch["tokens"], batch["patches"], cfg)
+        else:
+            x = embed_tokens(params, batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])[None, :]
+        for i in range(cfg.num_layers):
+            x = _decoder_layer(
+                params[f"layer_{i}"], x, cfg, run, i,
+                positions=positions, cross_kv=None,
+                moe_groups=moe_groups, seq_shard=False,
+            )
+        return apply_norm(cfg.norm, params["norm_f"], x)
+
+    def detect(params: dict, head_params: dict, batch: dict):
+        hidden = detect_features(params, batch)
+        pooled = pool_features(hidden)
+        return apply_head(
+            head_params, pooled,
+            max_dets=max_dets, num_classes=num_classes, feat_dim=feat_dim,
+        )
+
+    return detect

@@ -1,0 +1,8 @@
+"""Simulation substrate: synthetic video repositories + oracle detectors."""
+from repro.sim.repository import Repository, RepoSpec, generate, chunk_hit_rates, duration_probabilities
+from repro.sim.oracle import Detections, oracle_detect, noisy_detect, frame_embedding
+
+__all__ = [
+    "Repository", "RepoSpec", "generate", "chunk_hit_rates", "duration_probabilities",
+    "Detections", "oracle_detect", "noisy_detect", "frame_embedding",
+]

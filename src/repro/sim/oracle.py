@@ -1,0 +1,115 @@
+"""Oracle + noisy detectors over the synthetic repository.
+
+``oracle_detect`` returns the ground-truth detections of a frame in a fixed
+number of slots D (statically shaped).  ``noisy_detect`` degrades it with
+miss probability, localization jitter and false positives — modeling a real
+object detector's behaviour so matcher robustness is measurable.
+
+``neural_detect`` adapts any backbone ``serve_fn`` (frame embedding →
+detection head output) into the same interface; used by the end-to-end
+examples where the detector is one of the assigned architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.repository import Repository, instances_visible
+
+
+class Detections(NamedTuple):
+    boxes: jax.Array     # f32[D, 4]
+    feats: jax.Array     # f32[D, F]
+    valid: jax.Array     # bool[D]
+    inst_id: jax.Array   # i32[D] — ground-truth id (oracle only; -1 invalid)
+
+
+def _topk_slots(
+    repo: Repository, frame: jax.Array, mask: jax.Array, max_dets: int
+) -> Detections:
+    """Pack visible instances into D slots, preferring earliest ids."""
+    n = repo.num_instances
+    # order: visible instances first (stable by id)
+    order = jnp.argsort(jnp.where(mask, jnp.arange(n), n + jnp.arange(n)))
+    take = order[:max_dets]
+    valid = mask[take]
+    t = (frame - repo.inst_start[take]).astype(jnp.float32)[:, None]
+    boxes = repo.inst_box[take] + t * repo.inst_drift[take]
+    return Detections(
+        boxes=jnp.where(valid[:, None], boxes, 0.0),
+        feats=jnp.where(valid[:, None], repo.inst_feat[take], 0.0),
+        valid=valid,
+        inst_id=jnp.where(valid, take.astype(jnp.int32), -1),
+    )
+
+
+def oracle_detect(
+    repo: Repository, frame: jax.Array, *, query_class: int, max_dets: int = 16
+) -> Detections:
+    """Perfect detector for one query class."""
+    mask = instances_visible(repo, frame) & (repo.inst_class == query_class)
+    return _topk_slots(repo, frame, mask, max_dets)
+
+
+def noisy_detect(
+    key: jax.Array,
+    repo: Repository,
+    frame: jax.Array,
+    *,
+    query_class: int,
+    max_dets: int = 16,
+    miss_rate: float = 0.1,
+    fp_rate: float = 0.05,
+    jitter: float = 0.01,
+) -> Detections:
+    """Detector with misses, box jitter and false positives.
+
+    False positives get random boxes/features and inst_id = -2 so the
+    benchmark can distinguish them from real results when scoring recall.
+    """
+    k_miss, k_jit, k_fp, k_fpbox, k_fpfeat = jax.random.split(key, 5)
+    mask = instances_visible(repo, frame) & (repo.inst_class == query_class)
+    miss = jax.random.bernoulli(k_miss, miss_rate, mask.shape)
+    dets = _topk_slots(repo, frame, mask & ~miss, max_dets)
+
+    boxes = dets.boxes + jax.random.normal(k_jit, dets.boxes.shape) * jitter
+    # false positives occupy trailing empty slots
+    n_fp = jax.random.bernoulli(k_fp, fp_rate, (max_dets,))
+    fp_slot = ~dets.valid & n_fp
+    fp_xy = jax.random.uniform(k_fpbox, (max_dets, 2), minval=0.0, maxval=0.8)
+    fp_wh = jax.random.uniform(k_fpbox, (max_dets, 2), minval=0.05, maxval=0.2)
+    fp_boxes = jnp.concatenate([fp_xy, fp_xy + fp_wh], axis=1)
+    fp_feats = jax.random.normal(k_fpfeat, dets.feats.shape)
+    fp_feats = fp_feats / jnp.maximum(
+        jnp.linalg.norm(fp_feats, axis=-1, keepdims=True), 1e-9
+    )
+    return Detections(
+        boxes=jnp.where(fp_slot[:, None], fp_boxes, boxes),
+        feats=jnp.where(fp_slot[:, None], fp_feats, dets.feats),
+        valid=dets.valid | fp_slot,
+        inst_id=jnp.where(fp_slot, -2, dets.inst_id),
+    )
+
+
+def frame_embedding(
+    repo: Repository, frame: jax.Array, *, dim: int, patches: int = 0
+) -> jax.Array:
+    """Deterministic pseudo-embedding of a frame (stand-in for pixels →
+    patch embeddings).  Mixes per-instance features of visible instances
+    with a hash-based background so the surrogate model has real signal to
+    learn — crucial for a faithful BlazeIt baseline.
+
+    Returns f32[dim] (patches=0) or f32[patches, dim].
+    """
+    vis = instances_visible(repo, frame).astype(jnp.float32)
+    sig = (vis @ repo.inst_feat)  # f32[F]
+    f = frame.astype(jnp.float32)
+    idx = jnp.arange(dim, dtype=jnp.float32)
+    background = jnp.sin(f * 1e-3 + idx * 0.7) * 0.3
+    base = background.at[: sig.shape[0]].add(sig)
+    if patches == 0:
+        return base
+    p = jnp.arange(patches, dtype=jnp.float32)[:, None]
+    return base[None, :] + 0.05 * jnp.sin(p * 0.13 + idx[None, :])

@@ -1,0 +1,191 @@
+"""Checkpoint manager: sharded, resumable, CRC-verified (DESIGN.md §5).
+
+Layout:  <dir>/step_<N>/
+             manifest.json        — step, tree structure, leaf metadata, CRCs
+             shard_<host>.npz     — this host's leaf payloads
+
+Every pytree leaf (params, optimizer moments incl. QTensors, sampler
+state, data-pipeline cursors, PRNG key) is saved.  Restore is bit-exact;
+the manifest CRC gates torn writes (a crashed host leaves a missing/
+mismatched shard and the previous step directory is used instead —
+``latest_step`` only returns directories whose manifest verifies).
+
+On multi-host deployments each host writes the leaves it owns
+(process-local addressable shards); this container is single-host so
+host 0 writes everything — the format is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import QTensor
+
+_QT_MARKER = "__qtensor__"
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QTensor)
+    )
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    *,
+    host: int = 0,
+    extra: Optional[dict] = None,
+) -> str:
+    """Atomically write ``tree`` under <dir>/step_<step>."""
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    flat, _ = _flatten(tree)
+    payload: dict[str, np.ndarray] = {}
+    manifest_leaves = {}
+    for path, leaf in flat:
+        name = _path_str(path)
+        if isinstance(leaf, QTensor):
+            payload[name + "/q"] = np.asarray(leaf.q)
+            payload[name + "/scale"] = np.asarray(leaf.scale)
+            manifest_leaves[name] = {
+                _QT_MARKER: True,
+                "shape": list(leaf.shape),
+                "block": leaf.block,
+            }
+        else:
+            arr = np.asarray(leaf)
+            payload[name] = arr
+            manifest_leaves[name] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+    shard_path = os.path.join(tmp, f"shard_{host}.npz")
+    np.savez(shard_path, **payload)
+    with open(shard_path, "rb") as f:
+        crc = zlib.crc32(f.read())
+    manifest = {
+        "step": step,
+        "leaves": manifest_leaves,
+        "shards": {str(host): {"crc32": crc}},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def _verify(step_dir: str) -> bool:
+    try:
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        for host, meta in manifest["shards"].items():
+            p = os.path.join(step_dir, f"shard_{host}.npz")
+            with open(p, "rb") as fh:
+                if zlib.crc32(fh.read()) != meta["crc32"]:
+                    return False
+        return True
+    except (OSError, json.JSONDecodeError, KeyError):
+        return False
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest step whose manifest + shard CRCs verify."""
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(
+        (
+            int(d.split("_", 1)[1])
+            for d in os.listdir(directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        ),
+        reverse=True,
+    )
+    for s in steps:
+        if _verify(os.path.join(directory, f"step_{s}")):
+            return s
+    return None
+
+
+def restore_checkpoint(directory: str, step: int, tree_like: Any, *, host: int = 0):
+    """Restore into the structure of ``tree_like`` (bit-exact).
+
+    Returns (tree, extra).
+    """
+    step_dir = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(step_dir, f"shard_{host}.npz"))
+
+    flat, treedef = _flatten(tree_like)
+    leaves = []
+    for path, leaf in flat:
+        name = _path_str(path)
+        meta = manifest["leaves"][name]
+        if meta.get(_QT_MARKER):
+            leaves.append(
+                QTensor(
+                    q=jnp.asarray(data[name + "/q"]),
+                    scale=jnp.asarray(data[name + "/scale"]),
+                    shape=tuple(meta["shape"]),
+                    block=int(meta["block"]),
+                )
+            )
+        else:
+            leaves.append(jnp.asarray(data[name]))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest.get("extra", {})
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Keep-last-k rotation + resume discovery + async-safe atomic writes."""
+
+    directory: str
+    keep: int = 3
+    host: int = 0
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+        path = save_checkpoint(
+            self.directory, step, tree, host=self.host, extra=extra
+        )
+        self._gc()
+        return path
+
+    def restore_latest(self, tree_like: Any):
+        s = latest_step(self.directory)
+        if s is None:
+            return None
+        tree, extra = restore_checkpoint(self.directory, s, tree_like, host=self.host)
+        return s, tree, extra
+
+    def _gc(self) -> None:
+        steps = sorted(
+            (
+                int(d.split("_", 1)[1])
+                for d in os.listdir(self.directory)
+                if d.startswith("step_") and not d.endswith(".tmp")
+            ),
+            reverse=True,
+        )
+        for s in steps[self.keep :]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s}"), ignore_errors=True
+            )

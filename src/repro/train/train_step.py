@@ -1,0 +1,146 @@
+"""Training step builders (surrogate finetune / detector training / the
+assigned ``train_4k`` shape).
+
+``build_train_step`` returns a jittable ``step(state, batch) → (state,
+metrics)`` closed over (ModelConfig, RunConfig).  Sharding is carried by
+the logical-axis hints inside the model plus the in/out shardings the
+launcher attaches at ``jax.jit`` time.
+
+Cross-pod gradient compression (int8 + error feedback) is wired through
+``repro.distributed.compression``: the loss/grad is computed per pod under
+a partial-manual ``shard_map`` (manual over ``pod``, auto over
+data/model), the pod reduction is the compressed collective, and the
+optimizer update runs replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.compression import ErrorFeedback, make_cross_pod_allreduce
+from repro.models.transformer import forward_lm, lm_loss
+from repro.train.optimizer import AdamWConfig, AdamWState, apply_adamw, init_adamw
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    ef: Optional[ErrorFeedback]   # gradient-compression residuals (or None)
+    step: jax.Array
+
+
+def make_adamw_config(run: RunConfig) -> AdamWConfig:
+    return AdamWConfig(
+        learning_rate=run.learning_rate,
+        weight_decay=run.weight_decay,
+        grad_clip=run.grad_clip,
+        quantize_state=run.adam_8bit,
+    )
+
+
+def init_train_state(
+    params: dict, run: RunConfig, *, with_ef: bool = False
+) -> TrainState:
+    opt = init_adamw(params, make_adamw_config(run))
+    ef = None
+    if with_ef and run.grad_compression:
+        from repro.distributed.compression import init_error_feedback
+
+        ef = init_error_feedback(params)
+    return TrainState(params=params, opt=opt, ef=ef, step=jnp.zeros((), jnp.int32))
+
+
+def loss_fn(
+    params: dict, batch: dict, cfg: ModelConfig, run: RunConfig, *, moe_groups: int
+) -> jax.Array:
+    if run.stacked:
+        from repro.models.stacked import forward_lm_stacked as fwd
+    else:
+        fwd = forward_lm
+    logits = fwd(params, batch, cfg, run, mode="train", moe_groups=moe_groups)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # image patches carry no LM loss; logits cover [patches | tokens]
+        logits = logits[:, cfg.num_patches :]
+    return lm_loss(logits, labels)
+
+
+def microbatch_grad(params: dict, mb: dict, cfg: ModelConfig, run: RunConfig,
+                    *, moe_groups: int):
+    """Loss + grads of ONE microbatch (the scan body; also lowered alone by
+    the dry-run for scan-corrected FLOP accounting — DESIGN.md §6)."""
+    return jax.value_and_grad(
+        lambda p: loss_fn(p, mb, cfg, run, moe_groups=moe_groups)
+    )(params)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    run: RunConfig,
+    *,
+    moe_groups: int = 1,
+    mesh=None,
+) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    adamw_cfg = make_adamw_config(run)
+    cross_pod = (
+        make_cross_pod_allreduce(mesh, compress=run.grad_compression)
+        if (mesh is not None and run.grad_compression)
+        else None
+    )
+    k = max(run.microbatches, 1)
+
+    def grads_of(params: dict, batch: dict):
+        if k == 1:
+            return microbatch_grad(params, batch, cfg, run, moe_groups=moe_groups)
+        # gradient accumulation: scan over k microbatches (leading batch dim
+        # split), f32 accumulators sharded like the params.
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(k, b // k, *x.shape[1:])
+
+        mbs = {key: split(v) for key, v in batch.items()}
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = microbatch_grad(params, mb, cfg, run, moe_groups=moe_groups)
+            g_acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32), g_acc, g
+            )
+            return (loss_acc + loss, g_acc), None
+
+        (loss_sum, g_sum), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), acc0), mbs)
+        inv = 1.0 / k
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def step(state: TrainState, batch: dict):
+        loss, grads = grads_of(state.params, batch)
+        ef = state.ef
+        if cross_pod is not None:
+            grads, ef = cross_pod(grads, ef)
+        params, opt, om = apply_adamw(state.params, grads, state.opt, adamw_cfg)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=params, opt=opt, ef=ef, step=state.step + 1), metrics
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# surrogate training (BlazeIt baseline substrate)
+# --------------------------------------------------------------------------
+
+def build_surrogate_train_step(lr: float = 1e-3):
+    """SGD-with-momentum step for the cheap scorer (tiny model — plain f32)."""
+    from repro.models.detection import surrogate_loss
+
+    def step(params, momentum, emb, labels):
+        loss, grads = jax.value_and_grad(surrogate_loss)(params, emb, labels)
+        momentum = jax.tree.map(lambda m, g: 0.9 * m + g, momentum, grads)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, momentum)
+        return params, momentum, loss
+
+    return jax.jit(step)

@@ -1,0 +1,90 @@
+"""Blocked attention vs naive reference (shapes × flags × GQA)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import blocked_attention, decode_attention, repeat_kv
+
+
+def naive(q, k, v, causal):
+    d = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / math.sqrt(d)
+    if causal:
+        t = k.shape[1]
+        mask = jnp.tril(jnp.ones((q.shape[1], t), bool), k=t - q.shape[1])
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("unroll", [True, False])
+@pytest.mark.parametrize("skip", [True, False])
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32)])
+def test_blocked_matches_naive(causal, unroll, skip, bq, bk):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 4, 16), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 4, 16), jnp.float32)
+    out = blocked_attention(
+        q, k, v, causal=causal, block_q=bq, block_kv=bk,
+        causal_skip=skip, unroll=unroll,
+    )
+    np.testing.assert_allclose(out, naive(q, k, v, causal), rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_repeat_consistency():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 32, 8, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 32, 2, 16))
+    kr, vr = repeat_kv(k, 8), repeat_kv(v, 8)
+    out = blocked_attention(q, kr, vr, causal=True, block_q=16, block_kv=16)
+    np.testing.assert_allclose(out, naive(q, kr, vr, True), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_sweep(dtype):
+    key = jax.random.PRNGKey(4)
+    mk = lambda i, s: jax.random.normal(jax.random.fold_in(key, i), s, dtype)
+    q, k, v = mk(0, (1, 32, 2, 16)), mk(1, (1, 32, 2, 16)), mk(2, (1, 32, 2, 16))
+    out = blocked_attention(q, k, v, causal=True, block_q=16, block_kv=16)
+    ref = naive(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref, rtol=tol, atol=tol
+    )
+
+
+def test_q_offset_chunked_prefill():
+    """Chunked prefill: attending from positions [32, 64) over 64 kv."""
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (1, 64, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 2, 16))
+    full = blocked_attention(q, k, v, causal=True, block_q=16, block_kv=16)
+    part = blocked_attention(
+        q[:, 32:], k, v, causal=True, block_q=16, block_kv=16, q_offset=32
+    )
+    np.testing.assert_allclose(part, full[:, 32:], rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_last_position():
+    """Decode at position t == teacher-forced attention at row t."""
+    key = jax.random.PRNGKey(6)
+    B, S, H, KV, D = 2, 40, 8, 2, 16
+    q_all = jax.random.normal(key, (B, S, H, D))
+    k_all = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, D))
+    v_all = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D))
+    full = naive(q_all, repeat_kv(k_all, H), repeat_kv(v_all, H), causal=True)
+    t = 24
+    cache_k = jnp.zeros((B, 64, KV, D)).at[:, :t + 1].set(k_all[:, : t + 1])
+    cache_v = jnp.zeros((B, 64, KV, D)).at[:, :t + 1].set(v_all[:, : t + 1])
+    out = decode_attention(
+        q_all[:, t : t + 1], cache_k, cache_v,
+        cache_len=jnp.full((B,), t + 1, jnp.int32),
+    )
+    np.testing.assert_allclose(out[:, 0], full[:, t], rtol=2e-5, atol=2e-5)

@@ -1,0 +1,73 @@
+"""Chunking + random+ (bit-reversal) stratification properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunks import (
+    bit_reverse,
+    build_chunks,
+    global_randomplus_order,
+    randomplus_frame,
+    randomplus_offset,
+)
+
+
+def test_build_chunks_geometry():
+    idx = build_chunks([100, 250], chunk_frames=100)
+    assert idx.num_chunks == 4                       # 100 | 100+100+50
+    assert idx.total_frames == 350
+    assert list(np.asarray(idx.video_id)) == [0, 1, 1, 1]
+    assert list(np.asarray(idx.length)) == [100, 100, 100, 50]
+    assert list(np.asarray(idx.start)) == [0, 100, 200, 300]
+
+
+def test_bit_reverse_is_permutation():
+    bits = 6
+    vals = np.asarray(bit_reverse(jnp.arange(64), bits))
+    assert sorted(vals.tolist()) == list(range(64))
+
+
+@settings(max_examples=30, deadline=None)
+@given(length=st.integers(2, 5000), seed=st.integers(0, 20))
+def test_randomplus_offsets_in_range(length, seed):
+    idx = build_chunks([length], chunk_frames=length, seed=seed)
+    ks = jnp.arange(min(length, 64))
+    offs = np.asarray(
+        jnp.stack([randomplus_offset(idx, jnp.int32(0), k) for k in ks])
+    )
+    assert offs.min() >= 0 and offs.max() < length
+
+
+def test_randomplus_is_stratified():
+    """After k samples the max gap between visited offsets is O(length/k) —
+    the defining property of §3.7.2 (vs O(length log k / k) for uniform)."""
+    length = 4096
+    idx = build_chunks([length], chunk_frames=length, seed=3)
+    for k in (8, 32, 128):
+        offs = np.sort(
+            np.asarray(
+                jnp.stack(
+                    [randomplus_offset(idx, jnp.int32(0), jnp.int32(i)) for i in range(k)]
+                )
+            )
+        )
+        gaps = np.diff(np.concatenate([offs, [offs[0] + length]]))
+        assert gaps.max() <= 4 * length / k, (k, gaps.max())
+
+
+def test_global_randomplus_is_permutation():
+    order = global_randomplus_order(1000, seed=1)
+    assert sorted(order.tolist()) == list(range(1000))
+
+
+def test_global_randomplus_prefix_coverage():
+    order = global_randomplus_order(8192, seed=0)
+    prefix = np.sort(order[:64])
+    gaps = np.diff(np.concatenate([prefix, [prefix[0] + 8192]]))
+    assert gaps.max() <= 4 * 8192 / 64
+
+
+def test_randomplus_frame_offsets_by_chunk_start():
+    idx = build_chunks([100, 100], chunk_frames=100, seed=0)
+    f = int(randomplus_frame(idx, jnp.int32(1), jnp.int32(0)))
+    assert 100 <= f < 200

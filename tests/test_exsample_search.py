@@ -1,0 +1,81 @@
+"""End-to-end search behaviour on the simulated repository (paper §4)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import init_carry, init_matcher, init_state, run_search
+from repro.core.baselines import FrameSchedule, run_greedy, run_schedule
+from repro.sim import RepoSpec, generate
+from repro.sim.oracle import noisy_detect, oracle_detect
+
+
+@pytest.fixture(scope="module")
+def world():
+    spec = RepoSpec(
+        video_lengths=[20_000] * 5,
+        num_instances=200,
+        chunk_frames=2_000,
+        locality=4.0,
+        seed=1,
+    )
+    repo, chunks = generate(spec)
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    return repo, chunks, det
+
+
+def _fresh(chunks, seed=0):
+    return init_carry(
+        init_state(chunks.length), init_matcher(max_results=512),
+        jax.random.PRNGKey(seed),
+    )
+
+
+def test_exsample_beats_random_on_localized_data(world):
+    repo, chunks, det = world
+    ex, _ = run_search(
+        _fresh(chunks), chunks, detector=det, result_limit=20, max_steps=2000
+    )
+    rnd, _ = run_schedule(
+        _fresh(chunks), chunks,
+        FrameSchedule.randomplus(chunks.total_frames, 2000, seed=0),
+        detector=det, result_limit=20,
+    )
+    assert int(ex.results) >= 20
+    assert int(ex.step) < int(rnd.step), (int(ex.step), int(rnd.step))
+
+
+def test_batched_cohorts_find_results(world):
+    repo, chunks, det = world
+    ex, _ = run_search(
+        _fresh(chunks), chunks, detector=det, result_limit=20,
+        max_steps=2000, cohorts=8,
+    )
+    assert int(ex.results) >= 20
+
+
+def test_greedy_runs_and_terminates(world):
+    repo, chunks, det = world
+    g, _ = run_greedy(
+        _fresh(chunks), chunks, detector=det, result_limit=10, max_steps=1500
+    )
+    assert int(g.results) >= 10 or int(g.step) == 1500
+
+
+def test_noisy_detector_still_converges(world):
+    repo, chunks, _ = world
+    det = lambda key, frame: noisy_detect(
+        key, repo, frame, query_class=0, miss_rate=0.2, fp_rate=0.05
+    )
+    ex, _ = run_search(
+        _fresh(chunks), chunks, detector=det, result_limit=15, max_steps=2500
+    )
+    assert int(ex.results) >= 15
+
+
+def test_sampler_counters_consistent(world):
+    repo, chunks, det = world
+    ex, _ = run_search(
+        _fresh(chunks), chunks, detector=det, result_limit=10, max_steps=500
+    )
+    assert int(jnp.sum(ex.sampler.n)) == int(ex.step)
+    assert int(jnp.sum(ex.sampler.n1)) >= 0

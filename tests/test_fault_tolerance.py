@@ -1,0 +1,110 @@
+"""Fault tolerance: heartbeats, stragglers, restarts, batcher, elastic."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunks import build_chunks
+from repro.core.state import init_state
+from repro.distributed.elastic import plan_resize, resize_chunk_stats
+from repro.distributed.fault_tolerance import (
+    HeartbeatMonitor,
+    RestartPolicy,
+    WorkerState,
+)
+from repro.serve.batcher import RequestBatcher
+
+
+def test_heartbeat_transitions():
+    mon = HeartbeatMonitor(suspect_after_s=10, dead_after_s=30)
+    mon.register(0, now=0.0)
+    mon.register(1, now=0.0)
+    mon.heartbeat(0, now=30.0)
+    actions = mon.sweep(now=35.0)
+    assert 1 in actions["dead"]
+    assert mon.workers[0].state is WorkerState.HEALTHY
+    assert mon.healthy_workers == [0]
+
+
+def test_dead_worker_cohort_reissued():
+    mon = HeartbeatMonitor(dead_after_s=30)
+    mon.register(0, now=0.0)
+    mon.assign(0, cohort=42)
+    actions = mon.sweep(now=100.0)
+    assert actions["reissue_cohorts"] == [42]
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor(straggler_factor=3.0)
+    for w in range(4):
+        mon.register(w, now=0.0)
+        mon.heartbeat(w, now=1.0)
+        mon.record_completion(w, latency=1.0)
+    mon.record_completion(3, latency=100.0)   # ema jumps
+    mon.assign(3, cohort=7)
+    actions = mon.sweep(now=2.0)
+    assert 7 in actions["reissue_cohorts"]
+
+
+def test_restart_policy():
+    p = RestartPolicy(max_restarts=2)
+    assert p.should_restart(0) and p.should_restart(1)
+    assert not p.should_restart(2)
+
+
+def test_batcher_padding_and_order():
+    b = RequestBatcher(batch_size=4)
+    b.submit([10, 11, 12], [0, 0, 1], cohort=0)
+    assert b.ready()
+    batch = b.next_batch()
+    assert batch.frame_ids.tolist() == [10, 11, 12, -1]
+    assert batch.valid.tolist() == [True, True, True, False]
+    assert b.occupancy == 0.75
+
+
+def test_batcher_never_blocks_on_stragglers():
+    b = RequestBatcher(batch_size=4, max_wait_rounds=0)
+    b.submit([1], [0], cohort=0)
+    assert b.ready()                      # emits partial batch immediately
+    batch = b.next_batch()
+    assert batch.valid.sum() == 1
+
+
+def test_elastic_plan_feasibility():
+    import os
+    # single-device "mesh" of shape (1,1) always divides
+    import jax
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    from repro.configs import ARCHS, scale_down
+    from repro.models.transformer import backbone_schema
+
+    schema = backbone_schema(scale_down(ARCHS["qwen2.5-32b"]))
+    plan = plan_resize(schema, mesh, global_batch=8)
+    assert plan.feasible
+
+
+def test_resize_chunk_stats_pads_exhausted():
+    n1, n, frames = resize_chunk_stats(
+        jnp.ones(10), jnp.ones(10), jnp.full(10, 5, jnp.int32), new_shards=4
+    )
+    assert n1.shape[0] == 12
+    assert float(frames[-1]) == 0         # padded chunks exhausted
+    assert float(n[-1]) == 1
+
+
+def test_resume_replay_is_bit_exact(tmp_path):
+    """Kill-and-restore: state + pipeline cursor reproduce the same batch."""
+    from repro.data.pipeline import DeterministicTokenPipeline, TrainBatchSpec
+    from repro.train.checkpoint import CheckpointManager
+
+    spec = TrainBatchSpec(global_batch=4, seq_len=8, vocab=97)
+    pipe = DeterministicTokenPipeline(spec, seed=3)
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(4.0), "cursor": jnp.int32(5)}
+    mgr.save(5, state)
+    got = mgr.restore_latest(state)
+    assert got is not None
+    step, restored, _ = got
+    b1 = pipe.batch_at(int(restored["cursor"]))
+    b2 = pipe.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))

@@ -1,0 +1,69 @@
+"""Paper §3.1/§3.3 theorems as executable properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import good_turing as gt
+
+
+def p_vectors(min_size=2, max_size=200):
+    return st.lists(
+        st.floats(1e-6, 0.2), min_size=min_size, max_size=max_size
+    ).map(lambda xs: jnp.asarray(xs, jnp.float32))
+
+
+@settings(max_examples=60, deadline=None)
+@given(p=p_vectors(), n=st.integers(1, 500))
+def test_bias_is_nonnegative_and_bounded(p, n):
+    """Theorem (Bias): 0 ≤ rel.err ≤ min(max pᵢ, √N(μ+σ))   (Eqs. 2-4)."""
+    b = gt.bias_bounds(p, jnp.float32(n))
+    assert float(b.rel_err) >= -1e-6
+    assert float(b.rel_err) <= float(b.max_p_bound) + 1e-6
+    assert float(b.rel_err) <= float(b.moment_bound) + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=p_vectors(), n=st.integers(1, 300))
+def test_variance_bound(p, n):
+    """Theorem (Variance): exact Var[N¹/n] ≤ E[N¹]/n²   (Eq. 8)."""
+    exact = float(gt.exact_variance(p, jnp.float32(n)))
+    bound = float(gt.variance_bound(p, jnp.float32(n)))
+    assert exact <= bound + 1e-9
+
+
+def test_estimator_matches_expectation_monte_carlo():
+    """E[N¹(n)/n] ≈ Σπᵢ(n) and ≈ E[R(n+1)] up to the bias bound."""
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(
+        np.exp(rng.normal(-6.0, 1.5, 400)).clip(1e-6, 0.15), jnp.float32
+    )
+    n = 200
+    keys = jax.random.split(jax.random.PRNGKey(1), 300)
+
+    def draw(k):
+        seen, _ = gt.simulate_counts(k, p, n)
+        return gt.n1_from_counts(seen) / n, gt.remaining_value(p, seen)
+
+    est, rem = jax.vmap(draw)(keys)
+    mean_est = float(jnp.mean(est))
+    expected = float(gt.expected_estimate(p, jnp.float32(n)))
+    assert abs(mean_est - expected) / max(expected, 1e-9) < 0.1
+    # Eq. 2 exactly, on the analytic expectations (MC means carry noise):
+    assert expected >= float(gt.expected_new(p, jnp.float32(n)))
+    # and MC agrees with the analytic E[R(n+1)] within sampling error
+    assert abs(float(jnp.mean(rem)) - float(gt.expected_new(p, jnp.float32(n)))) < 0.02
+
+
+def test_poisson_rate_matches_variance_regime():
+    p = jnp.full((50,), 0.01, jnp.float32)
+    lam = float(gt.poisson_rate(p, jnp.float32(100)))
+    # Poisson ⇒ Var[N¹] ≈ λ;  bound E[N¹] = n·Σπ = n·λ/n... consistency:
+    assert lam > 0
+    assert lam <= 50 * 0.01 * 100  # trivially sane
+
+
+def test_estimator_handles_zero_counts():
+    assert float(gt.estimator(jnp.float32(0), jnp.float32(10))) == 0.0
+    assert float(gt.estimator(jnp.float32(0), jnp.float32(0))) == 0.0

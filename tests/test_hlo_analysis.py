@@ -1,0 +1,58 @@
+"""HLO collective parsing + roofline arithmetic."""
+import textwrap
+
+from repro.analysis.hlo import collective_bytes, collective_bytes_scaled
+from repro.analysis.roofline import Roofline
+
+HLO = textwrap.dedent(
+    """\
+    HloModule test
+
+    %body.1 (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+      %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+      ROOT %t = (s32[], f32[16,128]) tuple(%i, %ar)
+    }
+
+    %cond.1 (p: (s32[], f32[16,128])) -> pred[] {
+      %c = s32[] constant(12)
+      ROOT %cmp = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main.2 (a: f32[16,128]) -> f32[16,128] {
+      %ag = f32[64,128]{1,0} all-gather(%a), dimensions={0}
+      %w = (s32[], f32[16,128]) while(%init), condition=%cond.1, body=%body.1
+      ROOT %out = f32[16,128]{1,0} get-tuple-element(%w), index=1
+    }
+    """
+)
+
+
+def test_flat_collective_bytes():
+    got = collective_bytes(HLO)
+    assert got["bytes_by_op"]["all-gather"] == 64 * 128 * 4
+    assert got["bytes_by_op"]["all-reduce"] == 16 * 128 * 4
+    assert got["counts_by_op"] == {"all-gather": 1, "all-reduce": 1}
+
+
+def test_trip_scaled_collective_bytes():
+    got = collective_bytes_scaled(HLO)
+    assert got["bytes_by_op"]["all-gather"] == 64 * 128 * 4
+    assert got["bytes_by_op"]["all-reduce"] == 12 * 16 * 128 * 4   # ×12 trips
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(
+        name="x", mesh="m", chips=256,
+        hlo_flops=197e12,            # exactly 1 s of compute
+        hlo_bytes=819e9 * 0.5,       # 0.5 s of HBM
+        collective={"total_bytes": 50e9 * 2},   # 2 s of ICI
+        model_flops=197e12 * 256 * 0.5,
+        arg_bytes=1.0, temp_bytes=1.0, out_bytes=1.0,
+    )
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 0.5) < 1e-9
+    assert abs(r.t_collective - 2.0) < 1e-9
+    assert r.bottleneck == "collective"
+    assert abs(r.step_time - 2.0) < 1e-9
+    assert abs(r.useful_ratio - 0.5) < 1e-9
+    assert abs(r.mfu - 0.25) < 1e-9

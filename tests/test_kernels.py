@@ -1,0 +1,104 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.kernel import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.iou_match.kernel import iou_matrix
+from repro.kernels.iou_match.ref import iou_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.thompson.kernel import thompson_choose
+from repro.kernels.thompson.ref import thompson_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(i, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape, dtype)
+
+
+# ---------------------------------------------------------------- attention
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [
+    (1, 64, 2, 2, 16),     # MHA-like
+    (2, 128, 4, 2, 32),    # GQA 2:1
+    (1, 96, 6, 1, 16),     # MQA, non-pow2 seq (divisible by 32)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(causal, shape, dtype):
+    b, s, h, kv, d = shape
+    q, k, v = rnd(1, (b, s, h, d), dtype), rnd(2, (b, s, kv, d), dtype), rnd(3, (b, s, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_kv=32,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+# ------------------------------------------------------------------ decode
+@pytest.mark.parametrize("shape", [(2, 8, 2, 64, 256), (1, 4, 4, 32, 128)])
+@pytest.mark.parametrize("partial_len", [True, False])
+def test_flash_decode_sweep(shape, partial_len):
+    b, h, kv, d, t = shape
+    q = rnd(1, (b, h, d))
+    kc, vc = rnd(2, (b, t, kv, d)), rnd(3, (b, t, kv, d))
+    cl = (
+        jnp.asarray([t // 3 + 1] * b, jnp.int32)
+        if partial_len
+        else jnp.full((b,), t, jnp.int32)
+    )
+    out = flash_decode(q, kc, vc, cl, block_kv=t // 4, interpret=True)
+    ref = decode_ref(q, kc, vc, cl)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("chunk", [16, 32])
+@pytest.mark.parametrize("shape", [(2, 64, 8, 16), (3, 128, 16, 32)])
+def test_ssd_scan_sweep(chunk, shape):
+    bh, s, p, n = shape
+    x = rnd(1, (bh, s, p))
+    dt = jax.nn.softplus(rnd(2, (bh, s)))
+    bm, cm = rnd(3, (bh, s, n)) * 0.3, rnd(4, (bh, s, n)) * 0.3
+    a = -jnp.exp(rnd(5, (bh,)) * 0.3)
+    out = ssd_scan_kernel(x, dt, bm, cm, a, chunk=chunk, interpret=True)
+    ref = ssd_ref(x, dt, bm, cm, a, chunk=chunk)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------- thompson
+@pytest.mark.parametrize("m,c,bm", [(100, 3, 32), (1000, 8, 256), (65, 2, 64)])
+def test_thompson_kernel_sweep(m, c, bm):
+    alpha = jnp.abs(rnd(1, (m,))) * 2 + 0.1
+    alpha = alpha.at[m // 2].set(-1.0)        # exhausted sentinel
+    beta = jnp.abs(rnd(2, (m,))) * 5 + 1
+    z = rnd(3, (c, m))
+    idx, val = thompson_choose(alpha, beta, z, block_m=bm, interpret=True)
+    ridx, rval = thompson_ref(alpha, beta, z)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(val, rval, rtol=1e-6)
+    assert int((idx == m // 2).sum()) == 0    # exhausted never chosen
+
+
+# -------------------------------------------------------------------- iou
+@pytest.mark.parametrize("d,r", [(5, 7), (37, 211), (128, 64)])
+def test_iou_kernel_sweep(d, r):
+    a = jax.random.uniform(jax.random.fold_in(KEY, 10), (d, 4))
+    b = jax.random.uniform(jax.random.fold_in(KEY, 11), (r, 4))
+    mk = lambda x: jnp.concatenate([x[:, :2], x[:, :2] + 0.2 * x[:, 2:] + 0.01], 1)
+    a, b = mk(a), mk(b)
+    out = iou_matrix(a, b, block_d=16, block_r=32, interpret=True)
+    np.testing.assert_allclose(out, iou_ref(a, b), rtol=1e-5, atol=1e-6)
+
+
+def test_iou_self_diagonal_is_one():
+    a = jnp.asarray([[0.1, 0.1, 0.3, 0.3], [0.5, 0.5, 0.6, 0.7]])
+    out = iou_matrix(a, a, interpret=True)
+    np.testing.assert_allclose(jnp.diag(out), jnp.ones(2), rtol=1e-6)

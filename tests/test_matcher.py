@@ -1,0 +1,94 @@
+"""Matcher semantics: d0/d1 counting, dedup, cross-chunk, ring buffer."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.matcher import init_matcher, match_and_update, pairwise_iou
+
+
+def _box(x, y, w=0.1, h=0.1):
+    return [x, y, x + w, y + h]
+
+
+def _dets(boxes, valid=None):
+    boxes = jnp.asarray(boxes, jnp.float32)
+    d = boxes.shape[0]
+    feats = jnp.zeros((d, 8), jnp.float32)
+    if valid is None:
+        valid = jnp.ones((d,), bool)
+    return boxes, feats, jnp.asarray(valid)
+
+
+def test_pairwise_iou_known_values():
+    a = jnp.asarray([_box(0, 0, 0.2, 0.2)], jnp.float32)
+    b = jnp.asarray([_box(0, 0, 0.2, 0.2), _box(0.1, 0.1, 0.2, 0.2), _box(0.5, 0.5)], jnp.float32)
+    iou = np.asarray(pairwise_iou(a, b))
+    assert abs(iou[0, 0] - 1.0) < 1e-6
+    assert abs(iou[0, 1] - (0.01 / 0.07)) < 1e-5
+    assert iou[0, 2] == 0.0
+
+
+def test_new_then_repeat_then_third():
+    m = init_matcher(max_results=16)
+    b, f, v = _dets([_box(0.3, 0.3)])
+    r1 = match_and_update(m, b, f, v, jnp.int32(0), jnp.int32(100), jnp.int32(0))
+    assert int(r1.d0) == 1 and int(r1.d1) == 0
+    r2 = match_and_update(r1.new_state, b, f, v, jnp.int32(0), jnp.int32(110), jnp.int32(0))
+    assert int(r2.d0) == 0 and int(r2.d1) == 1          # seen-once → seen-twice
+    r3 = match_and_update(r2.new_state, b, f, v, jnp.int32(0), jnp.int32(120), jnp.int32(0))
+    assert int(r3.d0) == 0 and int(r3.d1) == 0          # third sighting: no change
+
+
+def test_time_gate_separates_instances():
+    m = init_matcher(max_results=16, time_gate=50)
+    b, f, v = _dets([_box(0.3, 0.3)])
+    r1 = match_and_update(m, b, f, v, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    r2 = match_and_update(r1.new_state, b, f, v, jnp.int32(0), jnp.int32(1000), jnp.int32(0))
+    assert int(r2.d0) == 1                               # beyond gate ⇒ new result
+
+
+def test_different_video_is_new():
+    m = init_matcher(max_results=16)
+    b, f, v = _dets([_box(0.3, 0.3)])
+    r1 = match_and_update(m, b, f, v, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    r2 = match_and_update(r1.new_state, b, f, v, jnp.int32(1), jnp.int32(5), jnp.int32(0))
+    assert int(r2.d0) == 1
+
+
+def test_cross_chunk_repeat_decrements_home(case_frames=30):
+    m = init_matcher(max_results=16)
+    b, f, v = _dets([_box(0.3, 0.3)])
+    r1 = match_and_update(m, b, f, v, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    r2 = match_and_update(
+        r1.new_state, b, f, v, jnp.int32(0), jnp.int32(case_frames), jnp.int32(1)
+    )
+    assert int(r2.d1) == 1 and int(r2.cross_chunk) == 1
+    homes = np.asarray(r2.cross_home)
+    assert (homes >= 0).sum() == 1 and homes.max() == 0  # home chunk is 0
+
+
+def test_invalid_slots_ignored():
+    m = init_matcher(max_results=16)
+    b, f, _ = _dets([_box(0.3, 0.3), _box(0.6, 0.6)])
+    v = jnp.asarray([True, False])
+    r = match_and_update(m, b, f, v, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    assert int(r.d0) == 1
+
+
+def test_multiple_new_in_one_frame():
+    m = init_matcher(max_results=16)
+    b, f, v = _dets([_box(0.1, 0.1), _box(0.5, 0.5), _box(0.8, 0.1)])
+    r = match_and_update(m, b, f, v, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    assert int(r.d0) == 3
+    assert int((r.new_state.times_seen > 0).sum()) == 3
+
+
+def test_ring_buffer_wraps():
+    m = init_matcher(max_results=2)
+    for i in range(4):
+        b, f, v = _dets([_box(0.05 + 0.22 * i, 0.05)])
+        r = match_and_update(
+            m, b, f, v, jnp.int32(0), jnp.int32(i * 2000), jnp.int32(0)
+        )
+        m = r.new_state
+        assert int(r.d0) == 1
+    assert int((m.times_seen > 0).sum()) == 2            # capacity bound holds

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+For every assigned architecture: instantiate a REDUCED config of the same
+family and run one forward + one train step + one decode step on CPU,
+asserting output shapes and the absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, RunConfig, scale_down
+from repro.models.transformer import (
+    forward_decode,
+    forward_lm,
+    init_decode_cache,
+    init_params,
+)
+from repro.train.train_step import build_train_step, init_train_state
+
+RUN = RunConfig(
+    param_dtype="float32", block_q=16, block_kv=16, unroll=False,
+    remat=False, sequence_parallel=False, causal_block_skip=False,
+)
+B, S = 2, 32
+
+
+def _batch(cfg, with_labels=False):
+    batch = {"tokens": jnp.ones((B, S), jnp.int32)}
+    n_lab = S
+    if cfg.family == "vlm":
+        batch = {
+            "tokens": jnp.ones((B, S - cfg.num_patches), jnp.int32),
+            "patches": jnp.zeros((B, cfg.num_patches, cfg.patch_dim), jnp.float32),
+        }
+        n_lab = S - cfg.num_patches
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.zeros((B, 16, cfg.d_model), jnp.float32)
+    if with_labels:
+        batch["labels"] = jnp.ones((B, n_lab), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg = scale_down(ARCHS[arch])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    logits = forward_lm(params, _batch(cfg), cfg, RUN, mode="train")
+    exp_s = S if cfg.family != "vlm" else S
+    assert logits.shape == (B, exp_s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_step(arch):
+    cfg = scale_down(ARCHS[arch])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_decode_cache(cfg, B, 64, jnp.float32)
+    logits, cache2 = forward_decode(
+        params, jnp.zeros((B, 1), jnp.int32), cache, cfg, RUN
+    )
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache2.pos) == 1
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_one_train_step(arch):
+    cfg = scale_down(ARCHS[arch])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    step = build_train_step(cfg, RUN)
+    state = init_train_state(params, RUN)
+    state, metrics = step(state, _batch(cfg, with_labels=True))
+    loss = float(metrics["loss"])
+    assert jnp.isfinite(loss) and loss > 0
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "granite-moe-1b-a400m", "mamba2-370m"])
+def test_loss_decreases_over_steps(arch):
+    """A few steps on a fixed batch must reduce the loss (learnability)."""
+    cfg = scale_down(ARCHS[arch])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    import dataclasses
+
+    run = dataclasses.replace(RUN, learning_rate=1e-2)
+    step = jax.jit(build_train_step(cfg, run))
+    state = init_train_state(params, run)
+    batch = _batch(cfg, with_labels=True)
+    losses = []
+    steps = 12 if cfg.family == "ssm" else 5   # SSD warms up more slowly
+    for _ in range(steps):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert min(losses[1:]) < losses[0], losses
+
+
+def test_microbatched_grads_match_full():
+    """k=4 gradient accumulation == single-batch gradients."""
+    import dataclasses
+
+    cfg = scale_down(ARCHS["phi3-medium-14b"])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, cfg.vocab),
+    }
+    from repro.train.train_step import microbatch_grad
+
+    run1 = RUN
+    runk = dataclasses.replace(RUN, microbatches=4)
+    l1, g1 = microbatch_grad(params, batch, cfg, run1, moe_groups=1)
+
+    stepk = build_train_step(cfg, runk)
+    # reach the internal accumulation through one step with zero LR
+    runk0 = dataclasses.replace(runk, learning_rate=0.0, weight_decay=0.0)
+    stepk0 = build_train_step(cfg, runk0)
+    state = init_train_state(params, runk0)
+    _, mk = stepk0(state, batch)
+    import numpy as np
+
+    np.testing.assert_allclose(float(mk["loss"]), float(l1), rtol=1e-5)

@@ -1,0 +1,87 @@
+"""Paper §3.4 + Appendix B: instances spanning multiple chunks.
+
+Executable versions of Eqs. 11–13: with cross-chunk instances, N¹_j counts
+results seen exactly once GLOBALLY whose sighting was in chunk j, and the
+estimator error stays term-by-term ≤ p_i × estimate.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    init_carry,
+    init_matcher,
+    init_state,
+)
+from repro.core.exsample import _process_frame
+from repro.sim import RepoSpec, generate
+from repro.sim.oracle import oracle_detect
+
+
+def _appendix_b_error(p1, q, n1):
+    """Eq. 13: Σ p_i1² (1-p_i1)^(n1-1) q_i — expected estimator error."""
+    return np.sum(p1**2 * (1 - p1) ** (n1 - 1) * q)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    p1=st.lists(st.floats(1e-4, 0.2), min_size=2, max_size=50),
+    n1=st.integers(1, 200),
+    qscale=st.floats(0.1, 1.0),
+)
+def test_appendix_b_error_bounded(p1, n1, qscale):
+    """Eq. 13's error is term-by-term ≤ p_i × the N¹/n estimate (the paper's
+    closing remark of Appendix B)."""
+    p1 = np.asarray(p1)
+    q = np.full_like(p1, qscale)      # prob of not being seen elsewhere
+    err = _appendix_b_error(p1, q, n1)
+    estimate = np.sum(p1 * (1 - p1) ** (n1 - 1) * q)   # E[N¹_1]/n_1
+    assert err <= np.max(p1) * estimate + 1e-12
+
+
+def test_cross_chunk_result_counts_once():
+    """A long instance spanning two chunks raises the FIRST chunk's N¹ and,
+    on re-detection in the second chunk, decrements it there (not the
+    second chunk's)."""
+    spec = RepoSpec(
+        video_lengths=[4_000], num_instances=1, chunk_frames=2_000,
+        duration_mu=20.0, duration_sigma=0.01,   # ~everywhere-visible
+        num_classes=1, seed=11,
+    )
+    repo, chunks = generate(spec)
+    assert chunks.num_chunks == 2
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    carry = init_carry(
+        init_state(chunks.length),
+        init_matcher(max_results=64, time_gate=10**9, feat_thresh=0.9),
+        jax.random.PRNGKey(0),
+    )
+    c = _process_frame(carry, chunks, det, jnp.int32(0), jax.random.PRNGKey(1))
+    assert float(c.sampler.n1[0]) == 1.0 and float(c.sampler.n1[1]) == 0.0
+    c = _process_frame(c, chunks, det, jnp.int32(1), jax.random.PRNGKey(2))
+    # second sighting happened in chunk 1 ⇒ chunk 0 (home) loses its N¹,
+    # chunk 1 never gains one (§3.4 rule)
+    assert float(c.sampler.n1[0]) == 0.0
+    assert float(c.sampler.n1[1]) == 0.0
+    assert int(c.results) == 1                    # still ONE distinct result
+
+
+def test_n1_never_double_counts_on_third_sighting():
+    spec = RepoSpec(
+        video_lengths=[3_000], num_instances=1, chunk_frames=1_000,
+        duration_mu=20.0, duration_sigma=0.01, num_classes=1, seed=12,
+    )
+    repo, chunks = generate(spec)
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    carry = init_carry(
+        init_state(chunks.length),
+        init_matcher(max_results=64, time_gate=10**9, feat_thresh=0.9),
+        jax.random.PRNGKey(0),
+    )
+    for i, c_id in enumerate((0, 1, 2)):
+        carry = _process_frame(
+            carry, chunks, det, jnp.int32(c_id), jax.random.PRNGKey(i)
+        )
+    assert float(jnp.sum(carry.sampler.n1)) == 0.0   # seen 3× ⇒ N¹ fully retired
+    assert int(carry.results) == 1

@@ -1,0 +1,127 @@
+"""Optimizer math, 8-bit state, checkpoint round-trip, schedules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    apply_adamw,
+    dequantize_blockwise,
+    init_adamw,
+    lr_schedule,
+    quantize_blockwise,
+    state_bytes,
+)
+
+
+def test_quantize_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3
+    q = quantize_blockwise(x, 64)
+    err = jnp.max(jnp.abs(dequantize_blockwise(q) - x))
+    # error ≤ scale/2 per block = max|block|/254
+    assert float(err) <= float(jnp.max(jnp.abs(x))) / 127.0
+
+
+def test_quantize_preserves_shape_and_zeros():
+    x = jnp.zeros((7, 13))
+    q = quantize_blockwise(x, 32)
+    out = dequantize_blockwise(q)
+    assert out.shape == (7, 13) and float(jnp.abs(out).max()) == 0.0
+
+
+def test_adamw_matches_reference_math():
+    cfg = AdamWConfig(
+        learning_rate=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+        grad_clip=1e9, warmup_steps=0, decay_steps=10**9,
+    )
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.25])}
+    state = init_adamw(params, cfg)
+    new, state, _ = apply_adamw(params, grads, state, cfg)
+    m = 0.1 * np.asarray([0.5, 0.25])
+    v = 0.01 * np.asarray([0.25, 0.0625])
+    upd = (m / 0.1) / (np.sqrt(v / 0.01) + 1e-8)
+    np.testing.assert_allclose(new["w"], np.asarray([1.0, -2.0]) - 0.1 * upd, rtol=1e-5)
+
+
+def test_adamw_8bit_tracks_fp32():
+    cfgs = [
+        AdamWConfig(learning_rate=0.05, quantize_state=q, warmup_steps=0,
+                    decay_steps=10**9, weight_decay=0.0)
+        for q in (False, True)
+    ]
+    params0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (256,))}
+    trajs = []
+    for cfg in cfgs:
+        params = dict(params0)
+        state = init_adamw(params, cfg)
+        for i in range(10):
+            grads = {"w": params["w"] * 0.1 + 0.01 * (i + 1)}
+            params, state, _ = apply_adamw(params, grads, state, cfg)
+        trajs.append(np.asarray(params["w"]))
+    rel = np.abs(trajs[0] - trajs[1]).max() / (np.abs(trajs[0]).max() + 1e-9)
+    assert rel < 0.02, rel
+
+
+def test_8bit_state_is_smaller():
+    params = {"w": jnp.zeros((4096,))}
+    s32 = init_adamw(params, AdamWConfig(quantize_state=False))
+    s8 = init_adamw(params, AdamWConfig(quantize_state=True))
+    assert state_bytes(s8) < state_bytes(s32) / 3
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(learning_rate=1.0, warmup_steps=10, decay_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 100, 1000)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] <= lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-6
+
+
+def test_checkpoint_roundtrip_bit_exact(tmp_path):
+    cfg = AdamWConfig(quantize_state=True)
+    params = {"a": jax.random.normal(jax.random.PRNGKey(0), (37,)),
+              "nest": {"b": jnp.arange(5, dtype=jnp.int32)}}
+    opt = init_adamw(params, cfg)
+    tree = {"params": params, "opt": opt, "cursor": jnp.int32(17)}
+    save_checkpoint(str(tmp_path), 3, tree, extra={"note": "x"})
+    restored, extra = restore_checkpoint(str(tmp_path), 3, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert extra["note"] == "x"
+
+
+def test_latest_step_skips_corrupt(tmp_path):
+    tree = {"a": jnp.arange(4)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    # corrupt step 2's shard
+    with open(os.path.join(str(tmp_path), "step_2", "shard_0.npz"), "ab") as f:
+        f.write(b"garbage")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_manager_rotation(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(str(tmp_path)) if d.startswith("step_")
+    )
+    assert steps == [3, 4]
+    got = mgr.restore_latest(tree)
+    assert got is not None and got[0] == 4

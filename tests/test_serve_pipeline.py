@@ -1,0 +1,104 @@
+"""Serving consistency + data pipeline determinism + sim invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, RunConfig, scale_down
+from repro.data.pipeline import (
+    DeterministicTokenPipeline,
+    ShuffledFramePipeline,
+    TrainBatchSpec,
+)
+from repro.models.transformer import (
+    forward_decode,
+    forward_lm,
+    init_decode_cache,
+    init_params,
+)
+from repro.sim import RepoSpec, chunk_hit_rates, generate
+from repro.sim.oracle import oracle_detect
+from repro.sim.repository import duration_probabilities, instances_visible
+
+RUN = RunConfig(param_dtype="float32", block_q=16, block_kv=16, unroll=False,
+                remat=False, sequence_parallel=False, causal_block_skip=False)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "gemma-7b", "granite-20b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Autoregressive decode logits at step t == full forward logits at t."""
+    cfg = scale_down(ARCHS[arch])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full = forward_lm(params, {"tokens": tokens}, cfg, RUN, mode="prefill")
+    cache = init_decode_cache(cfg, B, 16, jnp.float32)
+    for t in range(S):
+        logits, cache = forward_decode(params, tokens[:, t : t + 1], cache, cfg, RUN)
+        np.testing.assert_allclose(
+            logits, full[:, t], rtol=2e-4, atol=2e-4
+        )
+
+
+def test_token_pipeline_deterministic_resume():
+    spec = TrainBatchSpec(global_batch=8, seq_len=16, vocab=101)
+    a = DeterministicTokenPipeline(spec, seed=0).batch_at(7)
+    b = DeterministicTokenPipeline(spec, seed=0).batch_at(7)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = DeterministicTokenPipeline(spec, seed=1).batch_at(7)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_token_pipeline_shards_disjoint():
+    spec = TrainBatchSpec(global_batch=8, seq_len=16, vocab=101)
+    a = DeterministicTokenPipeline(spec, seed=0, data_shard=0, num_shards=2).batch_at(0)
+    b = DeterministicTokenPipeline(spec, seed=0, data_shard=1, num_shards=2).batch_at(0)
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_frame_pipeline_state_roundtrip():
+    p = ShuffledFramePipeline(1000, batch=16, seed=0)
+    p.next_ids()
+    state = p.state_dict()
+    ids1 = p.next_ids()
+    q = ShuffledFramePipeline(1000, batch=16, seed=0)
+    q.load_state_dict(state)
+    np.testing.assert_array_equal(ids1, q.next_ids())
+
+
+def test_sim_repo_invariants():
+    spec = RepoSpec(video_lengths=[5000, 3000], num_instances=100,
+                    chunk_frames=1000, seed=2)
+    repo, chunks = generate(spec)
+    # instances live inside their video
+    starts = np.asarray(repo.inst_start)
+    ends = np.asarray(repo.inst_end)
+    vids = np.asarray(repo.inst_video)
+    vstart = np.asarray([0, 5000])
+    vlen = np.asarray([5000, 3000])
+    assert (starts >= vstart[vids]).all()
+    assert (ends <= vstart[vids] + vlen[vids]).all()
+    assert (ends > starts).all()
+    # p_i consistent with durations
+    p = np.asarray(duration_probabilities(repo, chunks))
+    np.testing.assert_allclose(p, (ends - starts) / 8000.0, rtol=1e-6)
+
+
+def test_oracle_matches_visibility():
+    spec = RepoSpec(video_lengths=[2000], num_instances=50, chunk_frames=500, seed=3)
+    repo, chunks = generate(spec)
+    frame = jnp.int32(777)
+    dets = oracle_detect(repo, frame, query_class=0, max_dets=64)
+    vis = np.asarray(instances_visible(repo, frame) & (repo.inst_class == 0))
+    got = set(int(i) for i in np.asarray(dets.inst_id) if i >= 0)
+    assert got == set(np.nonzero(vis)[0].tolist())
+
+
+def test_chunk_hit_rates_positive_where_instances():
+    spec = RepoSpec(video_lengths=[4000], num_instances=80, chunk_frames=1000,
+                    locality=5.0, seed=4)
+    repo, chunks = generate(spec)
+    rates = np.asarray(chunk_hit_rates(repo, chunks))
+    assert rates.sum() > 0
+    assert rates.min() >= 0
