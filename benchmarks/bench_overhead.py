@@ -5,8 +5,17 @@ measured throughputs (detector 10 fps, scan 100 fps, random-read 50 fps)
 and under roofline-derived rates for the assigned backbones.  Shows the
 paper's headline: the surrogate's fixed labelling+scoring cost dwarfs its
 sampling savings for ad-hoc queries.
+
+Also measures OUR framework overhead (DESIGN.md §7): steps/sec of the
+host per-step reference driver vs the device-resident scanned driver at
+repository scale — the per-frame decision loop must be ~free next to
+detector cost for the paper's savings to survive systems overhead.
 """
 from __future__ import annotations
+
+import time
+
+import jax
 
 from repro.sim.costmodel import (
     CostRates,
@@ -14,6 +23,84 @@ from repro.sim.costmodel import (
     sampling_cost,
     surrogate_cost,
 )
+
+
+def bench_driver_dispatch(m_chunks: int = 10_000, chunk_frames: int = 64):
+    """Host loop vs scanned driver at M chunks, oracle detector.
+
+    Reports the full driver × Thompson-method matrix so the two
+    overheads the scanned driver removes stay separable:
+
+      * per-step dispatch + host sync — host_loop rows vs scanned rows
+        for the SAME method;
+      * the exact-Gamma rejection sampler (``jax.random.gamma`` costs
+        ~100 ms/step at M=10k on CPU) — "exact" rows vs the
+        Wilson–Hilferty / fused-pallas rows it is replaced by on the
+        device-resident path (DESIGN.md §3, §7).
+
+    The headline ``scanned_vs_host`` ratio compares the seed
+    configuration (host loop, exact Gamma — what ``run_search``
+    defaulted to) against the production configuration (scanned driver,
+    pallas choice path).  Returns that ratio.
+    """
+    from repro.core import (
+        init_carry,
+        init_matcher,
+        init_state,
+        run_search,
+        run_search_scan,
+    )
+    from repro.sim import RepoSpec, generate
+    from repro.sim.oracle import oracle_detect
+
+    videos = 10
+    spec = RepoSpec(
+        video_lengths=[m_chunks * chunk_frames // videos] * videos,
+        num_instances=64,
+        chunk_frames=chunk_frames,
+        seed=0,
+    )
+    repo, chunks = generate(spec)
+    assert chunks.num_chunks == m_chunks, chunks.num_chunks
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    fresh = lambda: init_carry(
+        init_state(chunks.length), init_matcher(max_results=512),
+        jax.random.PRNGKey(0),
+    )
+    never = 10**9  # unreachable result limit: measure steady-state rate
+
+    def timed(driver, method, steps):
+        # max_steps is a static argument of the scanned driver, so the
+        # warm-up must use the SAME steps or it compiles a throwaway
+        # executable; the timed call then reuses the warm one.
+        kw = dict(detector=det, result_limit=never, method=method)
+        driver(fresh(), chunks, max_steps=steps, **kw)  # compile + warm
+        t0 = time.perf_counter()
+        out, _ = driver(fresh(), chunks, max_steps=steps, **kw)
+        jax.block_until_ready(out.results)
+        return int(out.step) / (time.perf_counter() - t0)
+
+    print(f"\ndriver dispatch overhead (M={m_chunks:,} chunks, oracle detector)")
+    print("driver,method,steps_per_sec")
+    rates = {}
+    grid = [
+        ("host_loop", run_search, "exact", 50),
+        ("host_loop", run_search, "wilson_hilferty", 300),
+        ("scanned", run_search_scan, "exact", 50),
+        ("scanned", run_search_scan, "wilson_hilferty", 3_000),
+        ("scanned", run_search_scan, "pallas", 3_000),
+    ]
+    for name, driver, method, steps in grid:
+        rates[(name, method)] = timed(driver, method, steps)
+        print(f"{name},{method},{rates[(name, method)]:.0f}")
+
+    like_for_like = (
+        rates[("scanned", "wilson_hilferty")] / rates[("host_loop", "wilson_hilferty")]
+    )
+    headline = rates[("scanned", "pallas")] / rates[("host_loop", "exact")]
+    print(f"scanned_vs_host_same_method,{like_for_like:.1f}x")
+    print(f"scanned_vs_host,{headline:.1f}x  # seed default vs production path")
+    return headline
 
 
 def main():
@@ -56,6 +143,8 @@ def main():
         r = CostRates.from_backbone(flops_per_frame)
         c = sampling_cost(10_000, r)
         print(f"{arch},{r.detect_fps:.1f},{c.total_s:.0f}")
+
+    bench_driver_dispatch()
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.exsample_paper import bdd, dashcam
-from repro.core import init_carry, init_matcher, init_state, run_search
+from repro.core import init_carry, init_matcher, init_state, run_search_scan
 from repro.core.baselines import (
     FrameSchedule,
     run_greedy,
@@ -73,7 +73,10 @@ def run(scale: float = 0.15, classes=(0, 1, 2), recalls=(0.1, 0.5),
                 limit = max(int(n_total * recall), 1)
                 cohorts = 8 if limit >= 24 else 1   # §3.7.1: don't let a
                 # batched cohort overshoot tiny limit queries
-                ex, _ = run_search(
+                # device-resident driver: identical (step, results) to the
+                # host loop (tests/test_scan_driver.py) at a fraction of the
+                # wall-clock — bench_overhead.py quantifies the gap
+                ex, _ = run_search_scan(
                     _fresh(chunks, seed), chunks, detector=det,
                     result_limit=limit, max_steps=max_steps, cohorts=cohorts,
                 )

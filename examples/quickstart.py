@@ -10,7 +10,7 @@ compare frames processed (the paper's cost metric).
 import jax
 
 from repro.configs.exsample_paper import dashcam
-from repro.core import init_carry, init_matcher, init_state, run_search
+from repro.core import init_carry, init_matcher, init_state, run_search_scan
 from repro.core.baselines import FrameSchedule, run_schedule
 from repro.sim import generate
 from repro.sim.oracle import oracle_detect
@@ -31,7 +31,9 @@ def main():
         jax.random.PRNGKey(0),
     )
 
-    ex, trace = run_search(
+    # device-resident driver (DESIGN.md §7): whole search is one device
+    # call; the recall trace comes back in a single host sync at the end
+    ex, trace = run_search_scan(
         fresh(), chunks, detector=detector, result_limit=limit,
         max_steps=20_000, cohorts=8, trace_every=200,
     )

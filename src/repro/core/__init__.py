@@ -21,6 +21,7 @@ from repro.core.exsample import (
     exsample_step,
     exsample_batch_step,
     run_search,
+    run_search_scan,
 )
 
 __all__ = [
@@ -29,5 +30,6 @@ __all__ = [
     "ChunkIndex", "build_chunks", "randomplus_frame",
     "choose_chunks", "draw_scores", "gamma_params",
     "MatcherState", "init_matcher", "match_and_update", "pairwise_iou",
-    "ExSampleCarry", "init_carry", "exsample_step", "exsample_batch_step", "run_search",
+    "ExSampleCarry", "init_carry", "exsample_step", "exsample_batch_step",
+    "run_search", "run_search_scan",
 ]

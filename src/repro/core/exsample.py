@@ -5,6 +5,11 @@ pytree so it can be (a) jitted and scanned for simulation-scale benchmarks,
 (b) driven frame-by-frame from the host around a real serving stack, and
 (c) sharded (see ``repro.core.distributed``).
 
+Two drivers share the step function (DESIGN.md §7): ``run_search`` is the
+host reference loop (one dispatch + one sync per step), ``run_search_scan``
+is the device-resident ``lax.while_loop`` production driver — identical
+(step, results) trajectory, one host sync total.
+
 Detector plug-in protocol:  ``detector(key, frame_id) -> Detections``
 (see ``repro.sim.oracle.Detections``).  The oracle/noisy/neural detectors
 all satisfy it.
@@ -17,6 +22,7 @@ from typing import TYPE_CHECKING, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import thompson
 from repro.core.chunks import ChunkIndex, randomplus_frame
@@ -160,9 +166,20 @@ def run_search(
     method: str = "exact",
     trace_every: int = 0,
 ):
-    """Host driver: iterate until ``result_limit`` distinct results or
-    ``max_steps`` frames.  Returns (final_carry, trace) where trace is a
-    list of (frames_processed, results) checkpoints for recall curves."""
+    """Host driver: iterate until ``result_limit`` distinct results,
+    ``max_steps`` frames, or repository exhaustion.  Returns
+    (final_carry, trace) where trace is a list of (frames_processed,
+    results) checkpoints for recall curves.
+
+    One jitted step is dispatched per iteration and ``carry.results`` is
+    synced to the host every step, so framework overhead dominates at
+    simulation scale — kept as the reference/debugging driver; use
+    ``run_search_scan`` (DESIGN.md §7) when throughput matters.
+
+    Checkpoints fire on *boundary crossings* of ``trace_every`` (the step
+    counter advances by ``cohorts`` per iteration, so ``step %
+    trace_every == 0`` could silently skip every boundary).
+    """
     trace = []
     step_fn = (
         partial(exsample_step, detector=detector, method=method)
@@ -171,9 +188,112 @@ def run_search(
             exsample_batch_step, detector=detector, cohorts=cohorts, method=method
         )
     )
-    while int(carry.results) < result_limit and int(carry.step) < max_steps:
+    while (
+        int(carry.results) < result_limit
+        and int(carry.step) < max_steps
+        and not bool(jnp.all(carry.sampler.exhausted()))
+    ):
+        prev_step = int(carry.step)
         carry = step_fn(carry, chunks)
-        if trace_every and int(carry.step) % trace_every == 0:
+        if trace_every and (int(carry.step) // trace_every) > (prev_step // trace_every):
             trace.append((int(carry.step), int(carry.results)))
     trace.append((int(carry.step), int(carry.results)))
+    return carry, trace
+
+
+@partial(
+    jax.jit,
+    static_argnames=("detector", "cohorts", "method", "max_steps", "trace_every"),
+)
+def _search_scan_device(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    result_limit: jax.Array,
+    *,
+    detector: DetectorFn,
+    cohorts: int,
+    method: str,
+    max_steps: int,
+    trace_every: int,
+):
+    """Device-resident search loop (DESIGN.md §7).
+
+    The whole choose→process→update iteration runs under one
+    ``lax.while_loop`` so no per-step host round-trip or dispatch happens.
+    Early exit mirrors ``run_search`` exactly: stop when ``results ≥
+    result_limit`` OR ``step ≥ max_steps`` OR every chunk is exhausted,
+    checked *before* each (cohort) step.  Recall-curve checkpoints are
+    scattered into a preallocated i32[cap, 2] buffer on boundary
+    crossings of ``trace_every``; the host syncs the buffer once at the
+    end.
+    """
+    # worst case one crossing per trace_every frames, final step may
+    # overshoot max_steps by cohorts-1, plus the unconditional final entry
+    cap = (max_steps + cohorts - 1) // trace_every + 1 if trace_every else 1
+    buf0 = jnp.zeros((cap, 2), jnp.int32)
+    n0 = jnp.zeros((), jnp.int32)
+
+    if cohorts == 1:
+        step_fn = partial(exsample_step, detector=detector, method=method)
+    else:
+        step_fn = partial(
+            exsample_batch_step, detector=detector, cohorts=cohorts, method=method
+        )
+
+    def cond(state):
+        c, _, _ = state
+        return (
+            (c.results < result_limit)
+            & (c.step < max_steps)
+            & ~jnp.all(c.sampler.exhausted())
+        )
+
+    def body(state):
+        c, buf, n = state
+        c2 = step_fn(c, chunks)
+        if trace_every:
+            crossed = (c2.step // trace_every) > (c.step // trace_every)
+            entry = jnp.stack([c2.step, c2.results])
+            buf = buf.at[jnp.where(crossed, n, cap)].set(entry, mode="drop")
+            n = n + crossed.astype(jnp.int32)
+        return c2, buf, n
+
+    carry, buf, n = jax.lax.while_loop(cond, body, (carry, buf0, n0))
+    # unconditional final checkpoint, as in run_search
+    final = jnp.stack([carry.step, carry.results])
+    buf = buf.at[jnp.minimum(n, cap - 1)].set(final, mode="drop")
+    n = jnp.minimum(n + 1, cap)
+    return carry, buf, n
+
+
+def run_search_scan(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    result_limit: int,
+    max_steps: int,
+    cohorts: int = 1,
+    method: str = "exact",
+    trace_every: int = 0,
+):
+    """Device-resident drop-in for ``run_search`` — same signature, same
+    (step, results) trajectory for the same PRNG key, one host sync total.
+
+    ``max_steps``/``cohorts``/``trace_every`` are compile-time constants
+    (they size the trace buffer and the cohort batch); ``result_limit``
+    stays dynamic so sweeping recall targets reuses one executable.
+    """
+    carry, buf, n = _search_scan_device(
+        carry,
+        chunks,
+        jnp.asarray(result_limit, jnp.int32),
+        detector=detector,
+        cohorts=cohorts,
+        method=method,
+        max_steps=max_steps,
+        trace_every=trace_every,
+    )
+    buf_host = np.asarray(buf)  # the single device→host sync
+    trace = [(int(s), int(r)) for s, r in buf_host[: int(n)]]
     return carry, trace

@@ -186,3 +186,60 @@ def match_and_update(
 
 def num_results(state: MatcherState) -> jax.Array:
     return jnp.sum(state.times_seen > 0).astype(jnp.int32)
+
+
+@jax.jit
+def merge_matcher(
+    dst: MatcherState, src: MatcherState, snap: MatcherState
+) -> MatcherState:
+    """Merge a worker's matcher ``src`` into the shared ``dst``, where both
+    diverged from snapshot ``snap`` (async runtime, DESIGN.md §5).
+
+    Replacement (``dst := src``) is last-writer-wins: with overlapping
+    workers it drops every entry a concurrent merge added.  Instead:
+
+      * entries ``src`` INSERTED since the snapshot (the ring slots
+        ``[snap.cursor, src.cursor)``) are appended at ``dst.cursor`` —
+        no worker's insertions are ever lost;
+      * ``times_seen`` bumps to pre-existing entries are merged
+        *additively*, applied only where ``dst`` still holds the same
+        entry as the snapshot (identified by (video, frame) of first
+        sighting) — commutative, and exact in the sequential case.
+
+    Duplicate entries across overlapping workers remain possible (two
+    workers can both insert the same object); that is the documented
+    at-most-once-*effect* tolerance.  Assumes fewer insertions per merge
+    than ``capacity`` (cohort sizes ≪ ring capacity)."""
+    cap = dst.capacity
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    n_new = (src.cursor - snap.cursor) % cap
+    src_slot = (snap.cursor + idx) % cap
+    valid = idx < n_new
+    dst_slot = jnp.where(valid, (dst.cursor + idx) % cap, cap)  # OOB ⇒ drop
+
+    # --- additive seen-count bumps for entries that existed at snapshot ---
+    src_inserted = jnp.zeros((cap,), bool).at[src_slot].set(valid, mode="drop")
+    same_as_snap = (
+        (dst.video == snap.video)
+        & (dst.frame == snap.frame)
+        & (snap.times_seen > 0)
+    )
+    bump = jnp.where(
+        same_as_snap & ~src_inserted, src.times_seen - snap.times_seen, 0
+    )
+    times = dst.times_seen + bump
+
+    # --- append src's new entries at dst's cursor --------------------------
+    put = lambda d, s: jnp.concatenate(
+        [d, jnp.zeros((1,) + d.shape[1:], d.dtype)], 0
+    ).at[dst_slot].set(s[src_slot], mode="drop")[:-1]
+    return dataclasses.replace(
+        dst,
+        boxes=put(dst.boxes, src.boxes),
+        feats=put(dst.feats, src.feats),
+        video=put(dst.video, src.video),
+        frame=put(dst.frame, src.frame),
+        chunk=put(dst.chunk, src.chunk),
+        times_seen=put(times, src.times_seen),
+        cursor=(dst.cursor + n_new) % cap,
+    )

@@ -5,9 +5,10 @@ processing a batch of frames at a time without waiting for other workers…
 all updates are commutative").  This module is that sketch made concrete:
 
   * a driver owns the sampler/matcher state and a cohort queue;
-  * N workers pull cohorts, "process" them (detector batch — here a
-    callable; on a pod, a `serve_step` invocation), and push delta
-    statistics back whenever they finish — no barriers;
+  * N workers pull cohorts and process each one as a SINGLE scanned
+    device call (``_process_cohort``: a ``lax.fori_loop`` over the
+    cohort's frames — one dispatch per cohort, not per frame), then push
+    delta statistics back whenever they finish — no barriers;
   * the driver merges deltas commutatively (`merge_deltas`), re-samples
     new cohorts from the freshest state, monitors worker health
     (`HeartbeatMonitor`) and re-issues cohorts from dead/straggling
@@ -24,18 +25,41 @@ import dataclasses
 import queue
 import threading
 import time
+from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chunks import ChunkIndex, randomplus_frame
+from repro.core.chunks import ChunkIndex
 from repro.core.distributed import merge_deltas
 from repro.core.exsample import ExSampleCarry, _process_frame
-from repro.core.state import SamplerState
+from repro.core.matcher import MatcherState, merge_matcher
 from repro.core.thompson import choose_chunks
 from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+
+@partial(jax.jit, static_argnames=("detector",))
+def _process_cohort(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    chunk_ids: jax.Array,   # i32[B]
+    det_keys: jax.Array,    # key[B]
+    *,
+    detector: Callable,
+) -> ExSampleCarry:
+    """Process a whole cohort as ONE device call (DESIGN.md §7).
+
+    The per-frame Python loop this replaces paid one jit dispatch per
+    frame; here the B matcher-sequential frame updates fold under a
+    single ``lax.fori_loop`` so a worker's cohort costs one dispatch
+    regardless of B.
+    """
+    def body(i, c):
+        return _process_frame(c, chunks, detector, chunk_ids[i], det_keys[i])
+
+    return jax.lax.fori_loop(0, chunk_ids.shape[0], body, carry)
 
 
 @dataclasses.dataclass
@@ -53,6 +77,8 @@ class WorkerResult:
     delta_n: jax.Array
     new_results: int
     frames: int
+    matcher: Optional[MatcherState] = None       # worker's final result memory
+    snap_matcher: Optional[MatcherState] = None  # memory at the snapshot
 
 
 class AsyncSearchDriver:
@@ -100,12 +126,23 @@ class AsyncSearchDriver:
         self._work.put(cohort)
 
     def _merge(self, res: WorkerResult) -> None:
+        """Fold one worker result into the shared carry — sampler deltas,
+        counters AND matcher memory under a single lock acquisition.
+        The matcher is *merged* (new entries appended, seen-count bumps
+        added — ``merge_matcher``), not replaced: a concurrent merge can
+        neither double-count results nor drop another worker's matcher
+        insertions.  Cross-worker duplicate detections remain possible —
+        the at-most-once-*effect* tolerance, DESIGN.md §5."""
         with self._lock:
             self._inflight.pop(res.cohort_id, None)
             sampler = merge_deltas(self.carry.sampler, res.delta_n1, res.delta_n)
+            matcher = self.carry.matcher
+            if res.matcher is not None:
+                matcher = merge_matcher(matcher, res.matcher, res.snap_matcher)
             self.carry = dataclasses.replace(
                 self.carry,
                 sampler=sampler,
+                matcher=matcher,
                 step=self.carry.step + res.frames,
                 results=self.carry.results + res.new_results,
             )
@@ -130,33 +167,38 @@ class AsyncSearchDriver:
                 return
             self.monitor.assign(wid, cohort.cohort_id)
             t0 = time.monotonic()
-            # local carry: matcher access is serialized through the driver's
-            # carry; workers compute detector results + per-chunk deltas.
+            # Snapshot the shared carry under the lock and compute EVERY
+            # delta against that snapshot — reading self.carry again after
+            # processing would race with concurrent merges (double-counted
+            # results / lost matcher updates).
             with self._lock:
-                local = self.carry
-            before = local.sampler
-            for i, c in enumerate(cohort.chunk_ids):
-                local = _process_frame(
-                    local, self.chunks, self.detector, jnp.int32(int(c)),
-                    jax.random.fold_in(
-                        jax.random.PRNGKey(7), cohort.cohort_id * 64 + i
-                    ),
-                )
+                snapshot = self.carry
+            b = len(cohort.chunk_ids)
+            # nested fold_in: unique per (cohort, frame) for ANY cohort size
+            # (a flat cohort_id*stride + i scheme collides once b > stride)
+            base = jax.random.fold_in(jax.random.PRNGKey(7), cohort.cohort_id)
+            det_keys = jax.vmap(
+                lambda i: jax.random.fold_in(base, i)
+            )(jnp.arange(b, dtype=jnp.int32))
+            local = _process_cohort(
+                snapshot,
+                self.chunks,
+                jnp.asarray(cohort.chunk_ids, jnp.int32),
+                det_keys,
+                detector=self.detector,
+            )
             self._results.put(
                 WorkerResult(
                     cohort_id=cohort.cohort_id,
                     worker_id=wid,
-                    delta_n1=local.sampler.n1 - before.n1,
-                    delta_n=local.sampler.n - before.n,
-                    new_results=int(local.results - self.carry.results),
-                    frames=len(cohort.chunk_ids),
+                    delta_n1=local.sampler.n1 - snapshot.sampler.n1,
+                    delta_n=local.sampler.n - snapshot.sampler.n,
+                    new_results=int(local.results - snapshot.results),
+                    frames=b,
+                    matcher=local.matcher,           # merged atomically…
+                    snap_matcher=snapshot.matcher,   # …against this baseline
                 )
             )
-            # matcher memory travels with the merged carry
-            with self._lock:
-                self.carry = dataclasses.replace(
-                    self.carry, matcher=local.matcher
-                )
             now = time.monotonic()
             self.monitor.heartbeat(wid, now)
             self.monitor.record_completion(wid, now - t0)

@@ -1,12 +1,17 @@
 """Thompson sampling over Gamma beliefs (paper §3.3.1, Eq. 9-10).
 
-Two interchangeable samplers:
+Three interchangeable samplers:
 
   * ``draw_scores``           — exact Gamma draws via ``jax.random.gamma``.
   * ``draw_scores_wilson_hilferty`` — branch-free Wilson-Hilferty cube-normal
     approximation, the transform used inside the Pallas kernel
     (``repro.kernels.thompson``).  See DESIGN.md §3 for why rejection
     sampling (Marsaglia-Tsang) is replaced on TPU.
+  * ``method="pallas"`` in ``choose_chunks`` — the fused VMEM-resident
+    kernel (``repro.kernels.thompson.ops.choose``): same WH transform and
+    the same ``gamma_params`` clamping, with exhaustion encoded as an
+    ``alpha < 0`` sentinel (DESIGN.md §3).  Bit-identical chunk choices to
+    ``"wilson_hilferty"`` for the same key.
 
 ``choose_chunks`` implements the batched-cohort selection of §3.7.1: B
 independent Thompson draws per chunk yield B chunk indices, biased toward
@@ -73,6 +78,15 @@ def choose_chunks(
         scores = draw_scores(key, state, cohorts=cohorts)
     elif method == "wilson_hilferty":
         scores = draw_scores_wilson_hilferty(key, state, cohorts=cohorts)
+    elif method == "pallas":
+        # deferred import: kernels.thompson.ref imports this module
+        from repro.kernels.thompson.ops import choose
+
+        alpha, beta = gamma_params(state)  # already clamped ≥ alpha0/2 > 0
+        alpha = jnp.where(state.exhausted(), -1.0, alpha)
+        z = jax.random.normal(key, (cohorts, alpha.shape[0]), dtype=alpha.dtype)
+        idx, _ = choose(alpha, beta, z)
+        return idx
     else:
         raise ValueError(f"unknown Thompson method: {method!r}")
     return jnp.argmax(scores, axis=-1).astype(jnp.int32)

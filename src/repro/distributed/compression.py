@@ -59,7 +59,12 @@ def compressed_psum_leaf(
 
     Returns (mean gradient f32, new residual).
     """
-    npods = jax.lax.axis_size(axis)
+    # jax.lax.axis_size is absent from older JAX; psum of 1 over the axis
+    # is the version-portable spelling of the same quantity.
+    if hasattr(jax.lax, "axis_size"):
+        npods = jax.lax.axis_size(axis)
+    else:
+        npods = jax.lax.psum(1, axis)
     x = g.astype(jnp.float32) + r
     q, scale = _quantize(x, block)
     sent = _dequantize(q, scale, x.shape, block)

@@ -10,6 +10,14 @@ scratch.  Rejection samplers (Marsaglia–Tsang) are data-dependent loops —
 hostile to the VPU; WH is branch-free (DESIGN.md §3) and the consumer
 only needs ordinal fidelity.  Exhausted chunks arrive with α < 0 as the
 sentinel and are masked to -inf.
+
+Clamping contract (DESIGN.md §3): callers pass ``alpha`` already clamped
+by ``core.thompson.gamma_params`` (≥ α₀/2 > 0 for live chunks) with the
+negative sentinel only marking exhaustion; the kernel's internal
+``max(α, 1e-6)`` is pure numeric safety for the rsqrt and never binds on
+live chunks, so kernel scores equal
+``core.thompson.draw_scores_wilson_hilferty`` exactly (locked in by
+``tests/test_thompson_parity.py``).
 """
 from __future__ import annotations
 

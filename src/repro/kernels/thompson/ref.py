@@ -8,7 +8,11 @@ from repro.core.thompson import wilson_hilferty
 
 def thompson_ref(alpha, beta, z):
     """alpha/beta f32[M] (alpha<0 ⇒ exhausted), z f32[C,M] →
-    (idx i32[C], val f32[C])."""
+    (idx i32[C], val f32[C]).
+
+    Same clamping contract as the kernel (DESIGN.md §3): live chunks
+    arrive pre-clamped by ``gamma_params`` so the 1e-6 floor never binds.
+    """
     live = alpha > 0.0
     a = jnp.maximum(alpha, 1e-6)
     draw = wilson_hilferty(a[None, :], z) / jnp.maximum(beta, 1e-9)[None, :]

@@ -15,7 +15,7 @@ import time
 import jax
 
 from repro.configs.exsample_paper import bdd, dashcam
-from repro.core import init_carry, init_matcher, init_state, run_search
+from repro.core import init_carry, init_matcher, init_state, run_search, run_search_scan
 from repro.core.baselines import FrameSchedule, run_schedule
 from repro.sim import generate
 from repro.sim.costmodel import CostRates, sampling_cost
@@ -32,6 +32,9 @@ def main() -> None:
     ap.add_argument("--cohorts", type=int, default=16)
     ap.add_argument("--max-steps", type=int, default=50_000)
     ap.add_argument("--detector", default="oracle", choices=["oracle", "noisy"])
+    ap.add_argument("--driver", default="scan", choices=["scan", "host"],
+                    help="scan = device-resident lax.while_loop driver "
+                         "(DESIGN.md §7); host = per-step reference loop")
     ap.add_argument("--baseline", action="store_true",
                     help="also run random+ for comparison")
     ap.add_argument("--seed", type=int, default=0)
@@ -61,7 +64,8 @@ def main() -> None:
     )
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.time()
-    carry, trace = run_search(
+    driver = run_search_scan if args.driver == "scan" else run_search
+    carry, trace = driver(
         carry, chunks, detector=det, result_limit=args.limit,
         max_steps=args.max_steps, cohorts=args.cohorts, trace_every=256,
     )

@@ -1,0 +1,147 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface the
+test-suite uses, loaded by ``conftest.py`` ONLY when the real package is
+absent (environments where ``pip install`` is unavailable — the repo's
+declared test extra in ``pyproject.toml`` still names real hypothesis).
+
+Semantics: ``@given`` re-runs the test ``max_examples`` times with
+deterministic pseudo-random draws (seeded per test name), always probing
+the boundary values of each strategy first.  No shrinking, no database —
+just enough property coverage to keep the suite meaningful offline.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+from functools import wraps
+
+__version__ = "0.0-stub"
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng, boundary: int | None = None):
+        """boundary: 0/1 pick the low/high edge where meaningful."""
+        return self._draw(rng, boundary)
+
+    def map(self, fn):
+        return Strategy(lambda rng, b=None: fn(self._draw(rng, b)))
+
+
+def integers(min_value, max_value):
+    def draw(rng, boundary=None):
+        if boundary == 0:
+            return min_value
+        if boundary == 1:
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return Strategy(draw)
+
+
+def floats(min_value, max_value, **_kw):
+    def draw(rng, boundary=None):
+        if boundary == 0:
+            return float(min_value)
+        if boundary == 1:
+            return float(max_value)
+        return rng.uniform(float(min_value), float(max_value))
+
+    return Strategy(draw)
+
+
+def lists(elements, *, min_size=0, max_size=10):
+    def draw(rng, boundary=None):
+        size = min_size if boundary == 0 else (
+            max_size if boundary == 1 else rng.randint(min_size, max_size)
+        )
+        return [elements.example(rng) for _ in range(size)]
+
+    return Strategy(draw)
+
+
+def tuples(*strats):
+    return Strategy(lambda rng, b=None: tuple(s.example(rng, b) for s in strats))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(
+        lambda rng, b=None: seq[0] if b == 0 else (seq[-1] if b == 1 else rng.choice(seq))
+    )
+
+
+def booleans():
+    return sampled_from([False, True])
+
+
+def just(value):
+    return Strategy(lambda rng, b=None: value)
+
+
+class settings:
+    """Decorator form only (the suite never uses profiles)."""
+
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(**strategy_kw):
+    if not strategy_kw:
+        raise TypeError("stub @given supports keyword strategies only")
+
+    def decorate(fn):
+        @wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_stub_settings", None) or getattr(
+                fn, "_stub_settings", None
+            )
+            n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(fn.__qualname__)
+            for i in range(n):
+                # first two examples hit every strategy's low/high boundary
+                boundary = i if i < 2 else None
+                drawn = {
+                    k: s.example(rng, boundary) for k, s in strategy_kw.items()
+                }
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {drawn!r}"
+                    ) from e
+
+        # hide the strategy parameters from pytest's fixture resolution:
+        # only non-strategy params (fixtures) remain visible
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        params = [
+            p
+            for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategy_kw
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.lists = lists
+strategies.tuples = tuples
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+strategies.just = just
+strategies.SearchStrategy = Strategy

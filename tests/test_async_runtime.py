@@ -37,6 +37,45 @@ def test_async_driver_finds_results(world):
     assert int(out.step) == int(jax.numpy.sum(out.sampler.n))
 
 
+def test_async_driver_merge_is_atomic_under_contention(world):
+    """Regression for the snapshot/merge races: with many workers racing,
+    frame counters must still exactly equal the merged sampler statistics
+    and every merged result delta must be non-negative (the old code read
+    ``self.carry.results`` outside the lock, double-counting results, and
+    clobbered the matcher after merges)."""
+    repo, chunks, det = world
+    carry = init_carry(
+        init_state(chunks.length), init_matcher(max_results=2048),
+        jax.random.PRNGKey(3),
+    )
+    driver = AsyncSearchDriver(
+        carry, chunks, det, cohort_size=8, num_workers=8,
+        result_limit=40, max_frames=4_000,
+    )
+    seen_deltas = []
+    orig_merge = driver._merge
+
+    def spy_merge(res):
+        seen_deltas.append(res.new_results)
+        orig_merge(res)
+
+    driver._merge = spy_merge
+    out = driver.run()
+    assert int(out.results) >= 40 or int(out.step) >= 4_000
+    # counters merged exactly once per frame
+    assert int(out.step) == int(jax.numpy.sum(out.sampler.n))
+    # snapshot-based delta: never negative (old code read the live carry
+    # after processing, which could go negative under contention)
+    assert all(d >= 0 for d in seen_deltas), seen_deltas
+    # matcher MERGE, not replacement: every merged worker's insertions
+    # survive, so occupied result-memory slots equal the counted results.
+    # Last-writer-wins replacement fails this whenever two workers'
+    # processing windows overlapped (the final matcher then only holds the
+    # last worker's view).
+    occupied = int(jax.numpy.sum(out.matcher.times_seen > 0))
+    assert occupied == int(out.results), (occupied, int(out.results))
+
+
 def test_async_driver_single_worker_equivalent_semantics(world):
     """1-worker async == serialized batched search (same state algebra)."""
     repo, chunks, det = world
