@@ -3,6 +3,7 @@
   bench_bias     -- paper 3.3.2 / Fig. 2 (estimator + Poisson validation)
   bench_savings  -- paper Figs. 3-4 (frames-processed savings vs random+)
   bench_batched  -- paper 3.7.1 (cohort batching) + straggler model
+  bench_sharded  -- sharded driver steps/sec at 1/2/4/8 shards + parity
   bench_overhead -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
   bench_kernels  -- kernel reference microbenchmarks (CSV)
   bench_roofline -- Roofline table from dry-run artifacts
@@ -23,6 +24,7 @@ def main() -> None:
         bench_overhead,
         bench_roofline,
         bench_savings,
+        bench_sharded,
     )
 
     sections = [
@@ -30,6 +32,7 @@ def main() -> None:
         ("savings(fig3-4)", lambda: bench_savings.main(quick=quick)),
         ("chunking(sec3.5)", bench_chunking.main),
         ("batched(sec3.7.1)", bench_batched.main),
+        ("sharded(sec3.7.1)", lambda: bench_sharded.main(quick=quick)),
         ("overhead(fig6)", bench_overhead.main),
         ("kernels", bench_kernels.main),
         ("roofline", bench_roofline.main),

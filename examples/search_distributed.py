@@ -1,77 +1,72 @@
-"""Distributed ExSample: sharded chunk statistics + async cohort merges.
+"""Distributed ExSample: the sharded device-resident search driver.
 
-Simulates the multi-worker execution model of DESIGN.md §5 on an 8-device
-host mesh (this script re-execs itself with the XLA device-count flag):
-chunk stats shard over ``data``; every round each worker draws a cohort
-via the global Thompson choice, processes its frames, and accumulates
-*delta* statistics that merge through one psum every ``sync_every``
-rounds.  A deliberately slow worker shows that nothing barriers on it.
+Runs ``run_search_sharded`` (DESIGN.md §8) for real on an 8-device host
+mesh (this script re-execs itself with the XLA device-count flag): chunk
+statistics shard over ``data``, every round each shard processes its
+slice of the globally-consistent Thompson cohort, and per-shard matcher
+states merge through ``merge_matcher`` every ``sync_every`` rounds — the
+whole search is ONE device call with a single host sync at the end.  A
+single-device ``run_search_scan`` of the same query shows the sharded
+statistics land on the same answer.
 
   PYTHONPATH=src python examples/search_distributed.py
 """
-import os
-import subprocess
-import sys
-
-if os.environ.get("XLA_FLAGS", "").find("device_count") < 0:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    sys.exit(subprocess.call([sys.executable] + sys.argv, env=env))
+import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import init_carry, init_matcher, init_state
-from repro.core.distributed import distributed_choose, merge_deltas, pad_chunks
-from repro.core.exsample import _process_frame
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import ensure_host_devices
+
+ensure_host_devices(8)
+
+from repro.core import (
+    init_carry,
+    init_matcher,
+    init_state,
+    run_search_scan,
+    run_search_sharded,
+)
+from repro.launch.mesh import make_data_mesh
 from repro.sim import RepoSpec, generate
 from repro.sim.oracle import oracle_detect
 
 
 def main():
-    mesh = make_test_mesh((4, 2), ("data", "model"))
     spec = RepoSpec(video_lengths=[20_000] * 4, num_instances=200,
                     chunk_frames=2_000, locality=4.0, seed=1)
     repo, chunks = generate(spec)
     det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    fresh = lambda: init_carry(
+        init_state(chunks.length), init_matcher(max_results=1024),
+        jax.random.PRNGKey(0),
+    )
 
-    state = pad_chunks(init_state(chunks.length), 4)
-    carry = init_carry(state, init_matcher(max_results=1024), jax.random.PRNGKey(0))
-
-    workers, sync_every, limit = 4, 4, 30
-    deltas = [
-        (jnp.zeros_like(state.n1), jnp.zeros_like(state.n)) for _ in range(workers)
-    ]
-    rounds = 0
-    while int(carry.results) < limit and rounds < 200:
-        cohort = distributed_choose(
-            jax.random.fold_in(jax.random.PRNGKey(1), rounds),
-            carry.sampler, mesh=mesh, cohorts=workers,
-        )
-        for w in range(workers):
-            before = carry.sampler
-            carry = _process_frame(
-                carry, chunks, det, cohort[w],
-                jax.random.fold_in(jax.random.PRNGKey(2), rounds * workers + w),
-            )
-            dn1 = carry.sampler.n1 - before.n1
-            dn = carry.sampler.n - before.n
-            deltas[w] = (deltas[w][0] + dn1, deltas[w][1] + dn)
-        rounds += 1
-        if rounds % sync_every == 0:
-            # merge path exercised explicitly (the carry already folded the
-            # deltas in; a real deployment merges each worker's buffer here)
-            stacked_d1 = jnp.stack([d[0] for d in deltas])
-            stacked_dn = jnp.stack([d[1] for d in deltas])
-            _ = merge_deltas(carry.sampler, stacked_d1 * 0, stacked_dn * 0)
-    print(f"found {int(carry.results)} distinct results "
-          f"in {int(carry.step)} frames over {rounds} rounds "
-          f"({workers} workers, sync every {sync_every})")
-    n = np.asarray(carry.sampler.n[: chunks.num_chunks])
+    shards, sync_every, limit, budget = 8, 4, 120, 4_000
+    mesh = make_data_mesh(shards)
+    t0 = time.time()
+    carry, trace = run_search_sharded(
+        fresh(), chunks, mesh=mesh, detector=det, result_limit=limit,
+        max_steps=budget, cohorts=shards, sync_every=sync_every,
+    )
+    wall = time.time() - t0
+    print(f"sharded({shards}x, sync_every={sync_every}): "
+          f"{int(carry.results)} distinct results in {int(carry.step)} frames "
+          f"/ {len(trace)} merges ({wall:.1f}s incl. compile)")
+    n = np.asarray(carry.sampler.n)
     top = np.argsort(-n)[:5]
-    print("most-sampled chunks:", top.tolist(), "samples:", n[top].astype(int).tolist())
+    print("most-sampled chunks:", top.tolist(),
+          "samples:", n[top].astype(int).tolist())
+
+    scan, _ = run_search_scan(
+        fresh(), chunks, detector=det, result_limit=limit,
+        max_steps=budget, cohorts=shards, method="wilson_hilferty",
+    )
+    print(f"single-device scan: {int(scan.results)} results "
+          f"in {int(scan.step)} frames")
+    sn = np.asarray(scan.sampler.n)
+    overlap = len(set(top.tolist()) & set(np.argsort(-sn)[:5].tolist()))
+    print(f"top-5 hot-chunk overlap with scan: {overlap}/5")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ from repro.core.exsample import (
     exsample_batch_step,
     run_search,
     run_search_scan,
+    run_search_sharded,
 )
 
 __all__ = [
@@ -31,5 +32,5 @@ __all__ = [
     "choose_chunks", "draw_scores", "gamma_params",
     "MatcherState", "init_matcher", "match_and_update", "pairwise_iou",
     "ExSampleCarry", "init_carry", "exsample_step", "exsample_batch_step",
-    "run_search", "run_search_scan",
+    "run_search", "run_search_scan", "run_search_sharded",
 ]

@@ -96,10 +96,17 @@ def randomplus_offset(index: ChunkIndex, chunk: jax.Array, k: jax.Array) -> jax.
     """Frame offset (within the chunk) of the k-th random+ sample.
 
     ``bit_reverse(k mod pow2)`` enumerates [0, pow2) in stratified order;
-    non-power-of-two lengths are handled by rescaling the stratified value
-    into [0, length) — this preserves the low-discrepancy property (it is
-    the radical-inverse van der Corput point scaled to the domain) and never
-    indexes out of range.  A per-chunk rotation decorrelates chunks.
+    non-power-of-two lengths are handled by *cycle-walking* the van der
+    Corput permutation: a candidate ≥ length is re-permuted until it lands
+    in [0, length).  Because ``bit_reverse`` is an involution the walk
+    terminates after one step (``rev(rev(raw)) = raw < length``), so the
+    whole thing is a single ``where`` — branch-free and vectorized.
+    Cycle-walking a bijection of the superset restricted to [0, length) is
+    itself a bijection, so the first ``length`` ranks enumerate every
+    offset exactly once — rescaling (``floor(frac·length)``) collided for
+    non-power-of-two lengths, firing ``exhausted()`` before some offsets
+    were ever visited while revisiting others.  A per-chunk rotation
+    decorrelates chunks.
     """
     chunk = jnp.asarray(chunk, jnp.int32)
     length = index.length[chunk]
@@ -108,13 +115,9 @@ def randomplus_offset(index: ChunkIndex, chunk: jax.Array, k: jax.Array) -> jax.
     rot = index.rotation[chunk]
     raw = jnp.asarray(k, jnp.int32) % pow2
     cand = bit_reverse(raw, bits)
-    # rescale the stratified value into [0, length) in f32 (exact enough for
-    # sampling; clamped so we never index out of range; avoids i64)
-    frac = cand.astype(jnp.float32) / pow2.astype(jnp.float32)
-    offset = jnp.minimum(
-        jnp.floor(frac * length.astype(jnp.float32)).astype(jnp.int32),
-        length - 1,
-    )
+    # raw ≥ length only for ranks past exhaustion (the chunk fully
+    # sampled); the final modulo wraps those back in range
+    offset = jnp.where(cand < length, cand, raw)
     return (offset + rot) % jnp.maximum(length, 1)
 
 

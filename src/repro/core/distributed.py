@@ -31,6 +31,35 @@ from repro.core.state import SamplerState
 from repro.core.thompson import gamma_params, wilson_hilferty
 
 
+def get_shard_map():
+    """``shard_map`` across JAX versions: newer releases promote it to
+    ``jax.shard_map`` AND rename the ``check_rep`` kwarg to ``check_vma``;
+    older ones only have ``jax.experimental.shard_map``.  Callers keep the
+    old ``check_rep=...`` spelling and the returned wrapper translates (or
+    drops) it when the resolved function doesn't accept it.  Same
+    feature-detect pattern as ``launch/mesh.py`` (AxisType) and
+    ``distributed/compression.py`` (``lax.axis_size``)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+
+    import inspect
+
+    try:
+        params = inspect.signature(sm).parameters
+    except (TypeError, ValueError):  # C-level/odd callables: pass through
+        return sm
+
+    def shard_map_compat(f, **kwargs):
+        if "check_rep" in kwargs and "check_rep" not in params:
+            v = kwargs.pop("check_rep")
+            if "check_vma" in params:
+                kwargs["check_vma"] = v
+        return sm(f, **kwargs)
+
+    return shard_map_compat
+
+
 def shard_sampler_state(state: SamplerState, mesh: Mesh, axis: str = "data"):
     """Place chunk-stat arrays sharded over ``axis`` (M must divide evenly;
     pad_chunks() handles ragged M)."""
@@ -58,6 +87,55 @@ def pad_chunks(state: SamplerState, multiple: int) -> SamplerState:
     )
 
 
+def local_cohort_winners(
+    key: jax.Array,
+    alpha_l: jax.Array,      # f32[local_m] — this shard's slice
+    beta_l: jax.Array,       # f32[local_m]
+    exhausted_l: jax.Array,  # bool[local_m]
+    n_l: jax.Array,          # f32[local_m] — samples drawn per local chunk
+    *,
+    axis: str,
+    cohorts: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard body of the globally-consistent Thompson choice — called
+    INSIDE ``shard_map`` (by ``distributed_choose`` and by the sharded
+    search driver's resident loop, which cannot nest another shard_map).
+
+    Every shard draws WH-approximate gamma scores for its local chunks and
+    reduces to its per-cohort local winner; the (score, global index,
+    winner's n) triples are all-gathered and the global argmax is computed
+    redundantly on all shards (deterministic).  Collective volume is
+    O(cohorts × |shards|) scalars.  Returns replicated
+    (i32[cohorts] global chunk ids, f32[cohorts] winning scores — −inf iff
+    every chunk everywhere is exhausted, f32[cohorts] the owning shard's
+    sample count for each winner — the random+ rank base).
+    """
+    local_m = alpha_l.shape[0]
+    shard_id = jax.lax.axis_index(axis)
+    # decorrelate shards; fold_in is cheap and deterministic
+    k = jax.random.fold_in(key, shard_id)
+    z = jax.random.normal(k, (cohorts, local_m), alpha_l.dtype)
+    scores = wilson_hilferty(alpha_l[None, :], z) / beta_l[None, :]
+    scores = jnp.where(exhausted_l[None, :], -jnp.inf, scores)
+    local_best = jnp.argmax(scores, axis=-1)                    # [C]
+    local_score = jnp.take_along_axis(
+        scores, local_best[:, None], axis=-1
+    )[:, 0]                                                     # [C]
+    global_idx = shard_id * local_m + local_best
+    local_n = n_l[local_best]
+    # gather winners from every shard: [shards, C]
+    all_scores = jax.lax.all_gather(local_score, axis)
+    all_idx = jax.lax.all_gather(global_idx, axis)
+    all_n = jax.lax.all_gather(local_n, axis)
+    win = jnp.argmax(all_scores, axis=0)                        # [C]
+    pick = lambda a: jnp.take_along_axis(a, win[None, :], axis=0)[0]
+    return (
+        pick(all_idx).astype(jnp.int32),
+        pick(all_scores),
+        pick(all_n),
+    )
+
+
 @partial(jax.jit, static_argnames=("cohorts", "axis", "mesh"))
 def distributed_choose(
     key: jax.Array,
@@ -67,51 +145,31 @@ def distributed_choose(
     cohorts: int,
     axis: str = "data",
 ) -> jax.Array:
-    """Globally-consistent batched Thompson choice over sharded stats.
-
-    Every shard draws WH-approximate gamma scores for its local chunks and
-    reduces to its per-cohort local winner; winners are all-gathered and the
-    global argmax is computed redundantly on all shards (deterministic).
+    """Globally-consistent batched Thompson choice over sharded stats
+    (the standalone shard_map wrapper around ``local_cohort_winners``).
     Returns replicated i32[cohorts] of *global* chunk ids.
     """
     num_shards = mesh.shape[axis]
     m = state.num_chunks
     assert m % num_shards == 0, "call pad_chunks() first"
-    local_m = m // num_shards
 
     alpha, beta = gamma_params(state)
     exhausted = state.exhausted()
 
-    def local_choice(key, alpha_l, beta_l, exhausted_l):
-        shard_id = jax.lax.axis_index(axis)
-        # decorrelate shards; fold_in is cheap and deterministic
-        k = jax.random.fold_in(key, shard_id)
-        z = jax.random.normal(k, (cohorts, alpha_l.shape[0]), alpha_l.dtype)
-        scores = wilson_hilferty(alpha_l[None, :], z) / beta_l[None, :]
-        scores = jnp.where(exhausted_l[None, :], -jnp.inf, scores)
-        local_best = jnp.argmax(scores, axis=-1)                    # [C]
-        local_score = jnp.take_along_axis(
-            scores, local_best[:, None], axis=-1
-        )[:, 0]                                                     # [C]
-        global_idx = shard_id * local_m + local_best
-        # gather winners from every shard: [shards, C]
-        all_scores = jax.lax.all_gather(local_score, axis)
-        all_idx = jax.lax.all_gather(global_idx, axis)
-        win = jnp.argmax(all_scores, axis=0)                        # [C]
-        return jnp.take_along_axis(all_idx, win[None, :], axis=0)[0].astype(
-            jnp.int32
+    def local_choice(key, alpha_l, beta_l, exhausted_l, n_l):
+        idx, _, _ = local_cohort_winners(
+            key, alpha_l, beta_l, exhausted_l, n_l, axis=axis, cohorts=cohorts
         )
+        return idx
 
     specs = P(axis)
-    from jax.experimental.shard_map import shard_map
-
-    choice = shard_map(
+    choice = get_shard_map()(
         local_choice,
         mesh=mesh,
-        in_specs=(P(), specs, specs, specs),
+        in_specs=(P(), specs, specs, specs, specs),
         out_specs=P(),
         check_rep=False,
-    )(key, alpha, beta, exhausted)
+    )(key, alpha, beta, exhausted, state.n)
     return choice
 
 

@@ -109,7 +109,9 @@ class AsyncSearchDriver:
         self._next_cohort = 0
         self._inflight: dict[int, Cohort] = {}
         self.num_workers = num_workers
-        self.stats = {"cohorts": 0, "reissues": 0, "merges": 0}
+        self.stats = {
+            "cohorts": 0, "reissues": 0, "merges": 0, "duplicate_drops": 0,
+        }
 
     # ---- driver side -------------------------------------------------------
 
@@ -132,9 +134,20 @@ class AsyncSearchDriver:
         added — ``merge_matcher``), not replaced: a concurrent merge can
         neither double-count results nor drop another worker's matcher
         insertions.  Cross-worker duplicate detections remain possible —
-        the at-most-once-*effect* tolerance, DESIGN.md §5."""
+        the at-most-once-*effect* tolerance, DESIGN.md §5.
+
+        A cohort is merged AT MOST ONCE: ``HeartbeatMonitor`` re-issues a
+        straggler's cohort, so two completions of the same cohort can
+        land; folding both double-counts sampler deltas, ``step``,
+        ``results`` and matcher insertions.  The pending set is
+        ``self._inflight`` — the first completion removes the cohort under
+        the lock, any later completion of the same cohort is dropped (and
+        counted in ``stats["duplicate_drops"]``)."""
         with self._lock:
-            self._inflight.pop(res.cohort_id, None)
+            if res.cohort_id not in self._inflight:
+                self.stats["duplicate_drops"] += 1
+                return
+            del self._inflight[res.cohort_id]
             sampler = merge_deltas(self.carry.sampler, res.delta_n1, res.delta_n)
             matcher = self.carry.matcher
             if res.matcher is not None:
@@ -159,6 +172,42 @@ class AsyncSearchDriver:
 
     # ---- worker side -------------------------------------------------------
 
+    def _process_one(self, wid: int, cohort: Cohort) -> WorkerResult:
+        """Process one cohort against a locked snapshot of the shared carry.
+
+        Snapshot the shared carry under the lock and compute EVERY delta
+        against that snapshot — reading self.carry again after processing
+        would race with concurrent merges (double-counted results / lost
+        matcher updates).  Pure of scheduling concerns so tests can drive
+        duplicate completions synchronously.
+        """
+        with self._lock:
+            snapshot = self.carry
+        b = len(cohort.chunk_ids)
+        # nested fold_in: unique per (cohort, frame) for ANY cohort size
+        # (a flat cohort_id*stride + i scheme collides once b > stride)
+        base = jax.random.fold_in(jax.random.PRNGKey(7), cohort.cohort_id)
+        det_keys = jax.vmap(
+            lambda i: jax.random.fold_in(base, i)
+        )(jnp.arange(b, dtype=jnp.int32))
+        local = _process_cohort(
+            snapshot,
+            self.chunks,
+            jnp.asarray(cohort.chunk_ids, jnp.int32),
+            det_keys,
+            detector=self.detector,
+        )
+        return WorkerResult(
+            cohort_id=cohort.cohort_id,
+            worker_id=wid,
+            delta_n1=local.sampler.n1 - snapshot.sampler.n1,
+            delta_n=local.sampler.n - snapshot.sampler.n,
+            new_results=int(local.results - snapshot.results),
+            frames=b,
+            matcher=local.matcher,           # merged atomically…
+            snap_matcher=snapshot.matcher,   # …against this baseline
+        )
+
     def _worker(self, wid: int) -> None:
         self.monitor.register(wid, now=time.monotonic())
         while True:
@@ -167,38 +216,7 @@ class AsyncSearchDriver:
                 return
             self.monitor.assign(wid, cohort.cohort_id)
             t0 = time.monotonic()
-            # Snapshot the shared carry under the lock and compute EVERY
-            # delta against that snapshot — reading self.carry again after
-            # processing would race with concurrent merges (double-counted
-            # results / lost matcher updates).
-            with self._lock:
-                snapshot = self.carry
-            b = len(cohort.chunk_ids)
-            # nested fold_in: unique per (cohort, frame) for ANY cohort size
-            # (a flat cohort_id*stride + i scheme collides once b > stride)
-            base = jax.random.fold_in(jax.random.PRNGKey(7), cohort.cohort_id)
-            det_keys = jax.vmap(
-                lambda i: jax.random.fold_in(base, i)
-            )(jnp.arange(b, dtype=jnp.int32))
-            local = _process_cohort(
-                snapshot,
-                self.chunks,
-                jnp.asarray(cohort.chunk_ids, jnp.int32),
-                det_keys,
-                detector=self.detector,
-            )
-            self._results.put(
-                WorkerResult(
-                    cohort_id=cohort.cohort_id,
-                    worker_id=wid,
-                    delta_n1=local.sampler.n1 - snapshot.sampler.n1,
-                    delta_n=local.sampler.n - snapshot.sampler.n,
-                    new_results=int(local.results - snapshot.results),
-                    frames=b,
-                    matcher=local.matcher,           # merged atomically…
-                    snap_matcher=snapshot.matcher,   # …against this baseline
-                )
-            )
+            self._results.put(self._process_one(wid, cohort))
             now = time.monotonic()
             self.monitor.heartbeat(wid, now)
             self.monitor.record_completion(wid, now - t0)

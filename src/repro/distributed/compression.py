@@ -91,7 +91,9 @@ def make_cross_pod_allreduce(mesh: Mesh, *, compress: bool, block: int = 256):
     if "pod" not in mesh.axis_names:
         return lambda grads, ef: (grads, ef)
 
-    from jax.experimental.shard_map import shard_map
+    from repro.core.distributed import get_shard_map
+
+    shard_map = get_shard_map()
 
     if not compress:
         def plain(grads, ef):

@@ -35,5 +35,57 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     return _make_mesh(shape, axes)
 
 
+def make_data_mesh(num_shards: int):
+    """1-D ``("data",)`` mesh over the first ``num_shards`` local devices —
+    the sharded search driver's layout (``run_search_sharded``).  Built
+    from an explicit device subset so a search can use fewer shards than
+    the host exposes (``jax.make_mesh`` insists on all of them)."""
+    import numpy as np
+
+    devices = jax.devices()
+    if len(devices) < num_shards:
+        raise ValueError(
+            f"need {num_shards} devices for a {num_shards}-way data mesh, "
+            f"have {len(devices)} (set --xla_force_host_platform_device_count)"
+        )
+    return jax.sharding.Mesh(
+        np.asarray(devices[:num_shards]).reshape(num_shards), ("data",)
+    )
+
+
+def ensure_host_devices(num_shards: int, *, argv=None) -> None:
+    """Make sure this process sees ≥ ``num_shards`` devices, re-execing a
+    child with ``--xla_force_host_platform_device_count`` when it doesn't
+    (the flag must precede the child's first jax import, which is why this
+    re-execs instead of mutating flags in place).
+
+    Safety properties every ad-hoc copy of this logic kept getting wrong:
+    the child pins ``JAX_PLATFORMS=cpu`` (the device-count flag only
+    affects the CPU platform, so a GPU host would otherwise re-exec
+    forever), existing ``XLA_FLAGS`` are appended to rather than
+    clobbered, and a device-count flag already present acts as the repeat
+    guard — the caller's mesh construction then raises a clear error
+    instead of spawning another child.  ``argv`` overrides the child
+    command line (e.g. ``[sys.executable, "-m", "pkg.mod", ...]`` for
+    ``-m`` entry points); default re-runs ``sys.argv`` as a script.
+    Returns normally iff enough devices are available in THIS process.
+    """
+    import os
+    import subprocess
+    import sys
+
+    if len(jax.devices()) >= num_shards:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "device_count" in flags:
+        return  # already forced and still short: let make_data_mesh raise
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (flags + " " if flags else "") + (
+        f"--xla_force_host_platform_device_count={num_shards}"
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    sys.exit(subprocess.call(argv or [sys.executable] + sys.argv, env=env))
+
+
 def describe(mesh) -> str:
     return f"mesh{tuple(mesh.devices.shape)} axes={mesh.axis_names}"

@@ -6,16 +6,30 @@ and the checkpoint manager — the full Algorithm 1 deployment loop with
 resumable state.
 
   PYTHONPATH=src python -m repro.launch.search --limit 50 --cohorts 16
+  PYTHONPATH=src python -m repro.launch.search --limit 50 --mesh 4
+
+``--mesh N`` runs the sharded device-resident driver
+(``run_search_sharded``, DESIGN.md §8) on an N-way ``data`` mesh.  When
+the host exposes fewer devices, ``main()`` re-execs into a child with
+simulated host devices (``launch.mesh.ensure_host_devices``).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
 
 from repro.configs.exsample_paper import bdd, dashcam
-from repro.core import init_carry, init_matcher, init_state, run_search, run_search_scan
+from repro.core import (
+    init_carry,
+    init_matcher,
+    init_state,
+    run_search,
+    run_search_scan,
+    run_search_sharded,
+)
 from repro.core.baselines import FrameSchedule, run_schedule
 from repro.sim import generate
 from repro.sim.costmodel import CostRates, sampling_cost
@@ -35,11 +49,26 @@ def main() -> None:
     ap.add_argument("--driver", default="scan", choices=["scan", "host"],
                     help="scan = device-resident lax.while_loop driver "
                          "(DESIGN.md §7); host = per-step reference loop")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="N>1 runs run_search_sharded on an N-way data mesh "
+                         "(DESIGN.md §8); simulated host devices are forced "
+                         "automatically")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="rounds between sampler/matcher merges on the "
+                         "sharded driver (eventual-consistency Thompson)")
     ap.add_argument("--baseline", action="store_true",
                     help="also run random+ for comparison")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
+
+    if args.mesh > 1:
+        from repro.launch.mesh import ensure_host_devices
+
+        ensure_host_devices(
+            args.mesh,
+            argv=[sys.executable, "-m", "repro.launch.search"] + sys.argv[1:],
+        )
 
     setup = (dashcam if args.dataset == "dashcam" else bdd)(
         seed=args.seed, scale=args.scale
@@ -64,11 +93,27 @@ def main() -> None:
     )
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.time()
-    driver = run_search_scan if args.driver == "scan" else run_search
-    carry, trace = driver(
-        carry, chunks, detector=det, result_limit=args.limit,
-        max_steps=args.max_steps, cohorts=args.cohorts, trace_every=256,
-    )
+    if args.mesh > 1:
+        from repro.launch.mesh import make_data_mesh
+
+        cohorts = args.cohorts - args.cohorts % args.mesh or args.mesh
+        if cohorts != args.cohorts:
+            print(f"--cohorts {args.cohorts} → {cohorts} "
+                  f"(must be a multiple of --mesh {args.mesh})")
+        if args.driver != "scan":
+            print(f"--driver {args.driver} ignored: --mesh {args.mesh} "
+                  "selects the sharded driver (DESIGN.md §8)")
+        carry, trace = run_search_sharded(
+            carry, chunks, mesh=make_data_mesh(args.mesh), detector=det,
+            result_limit=args.limit, max_steps=args.max_steps,
+            cohorts=cohorts, sync_every=args.sync_every,
+        )
+    else:
+        driver = run_search_scan if args.driver == "scan" else run_search
+        carry, trace = driver(
+            carry, chunks, detector=det, result_limit=args.limit,
+            max_steps=args.max_steps, cohorts=args.cohorts, trace_every=256,
+        )
     wall = time.time() - t0
     rates = CostRates()
     cost = sampling_cost(int(carry.step), rates)

@@ -76,6 +76,40 @@ def test_async_driver_merge_is_atomic_under_contention(world):
     assert occupied == int(out.results), (occupied, int(out.results))
 
 
+def test_async_driver_drops_duplicate_completions(world):
+    """Regression for the double-merge bug: ``HeartbeatMonitor`` re-issues
+    a straggler's cohort, so two completions of the SAME cohort can land.
+    The old ``_merge`` folded every WorkerResult in — sampler deltas,
+    ``step``, ``results`` and matcher insertions all double-counted.  A
+    cohort must merge at most once; the duplicate is dropped and counted."""
+    repo, chunks, det = world
+    carry = init_carry(
+        init_state(chunks.length), init_matcher(max_results=1024),
+        jax.random.PRNGKey(7),
+    )
+    driver = AsyncSearchDriver(
+        carry, chunks, det, cohort_size=4, num_workers=1,
+        result_limit=10**9, max_frames=10**9,
+    )
+    driver._issue_cohort()
+    cohort = driver._work.get_nowait()
+    first = driver._process_one(0, cohort)
+    # force a re-issue (what the monitor does for a straggler) and let a
+    # second worker complete the same cohort
+    driver._reissue(cohort.cohort_id)
+    dup = driver._work.get_nowait()
+    second = driver._process_one(1, dup)
+    driver._merge(first)
+    driver._merge(second)
+    assert driver.stats["reissues"] == 1
+    assert driver.stats["duplicate_drops"] == 1
+    # step equals DISTINCT frames processed, not completions merged
+    assert int(driver.carry.step) == len(cohort.chunk_ids)
+    assert int(driver.carry.step) == int(jax.numpy.sum(driver.carry.sampler.n))
+    occupied = int(jax.numpy.sum(driver.carry.matcher.times_seen > 0))
+    assert occupied == int(driver.carry.results)
+
+
 def test_async_driver_single_worker_equivalent_semantics(world):
     """1-worker async == serialized batched search (same state algebra)."""
     repo, chunks, det = world

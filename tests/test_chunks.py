@@ -38,6 +38,18 @@ def test_randomplus_offsets_in_range(length, seed):
     assert offs.min() >= 0 and offs.max() < length
 
 
+@settings(max_examples=40, deadline=None)
+@given(length=st.integers(1, 512), seed=st.integers(0, 10))
+def test_randomplus_first_length_ranks_are_permutation(length, seed):
+    """§3.7.2: the first `length` random+ ranks must visit every offset
+    exactly once — ``exhausted()`` fires after `length` samples, so any
+    collision means some frame is never sampled while another is visited
+    twice (the rescaling bug: a length-3 chunk yielded (0, 1, 0))."""
+    idx = build_chunks([length], chunk_frames=length, seed=seed)
+    offs = np.asarray(randomplus_offset(idx, jnp.int32(0), jnp.arange(length)))
+    assert sorted(offs.tolist()) == list(range(length))
+
+
 def test_randomplus_is_stratified():
     """After k samples the max gap between visited offsets is O(length/k) —
     the defining property of §3.7.2 (vs O(length log k / k) for uniform)."""
