@@ -1,0 +1,115 @@
+"""Multi-query amortization (DESIGN.md §9): detector invocations per result.
+
+ExSample's cost model (paper §3.7.1) assumes detector invocations dominate,
+so serving Q concurrent queries over the same repository should amortize
+one decode/detect pass across all of them.  This bench runs the acceptance
+comparison: Q = 8 overlapping dashcam queries (two predicates, four users
+each — the Focus/EKO shared-ingest scenario) through ``run_search_multi``
+with cross-query dedup + a repository-sized detection cache, against the
+same Q queries run sequentially through ``run_search_scan`` — identical
+per-query keys, identical result limits, identical frame budget.
+
+With the oracle detector the per-query trajectories are bit-identical
+between the two arms (dedup/caching change WHICH detector invocations
+happen, never the values a query consumes), so the ratio of detector
+invocations per result is exactly the amortization factor.  Acceptance
+gate: ≥ 2x fewer detector invocations per result at Q=8.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+Q_CLASSES = (0, 0, 0, 0, 1, 1, 1, 1)   # two predicates × four users
+
+
+def main(quick: bool = False) -> None:
+    from repro.configs.exsample_paper import dashcam
+    from repro.core import (
+        init_carry,
+        init_carry_multi,
+        init_matcher,
+        init_state,
+        run_search_multi,
+        run_search_scan,
+    )
+    from repro.sim import generate
+    from repro.sim.oracle import class_select, filter_class, oracle_detect
+
+    scale = 0.02 if quick else 0.05
+    limit = 15 if quick else 40
+    budget = 2_048 if quick else 8_192
+    cohorts = 8
+    setup = dashcam(seed=0, scale=scale)
+    repo, chunks = generate(setup.repo)
+    q_n = len(Q_CLASSES)
+
+    det_all = lambda key, frame: oracle_detect(repo, frame, query_class=None)
+    select = class_select(repo, Q_CLASSES)
+
+    def class_det(c):
+        # sequential arm: same shared detector output, filtered to one
+        # class — the same predicate as select(q, ·) in the multi arm
+        return lambda key, frame: filter_class(repo, det_all(key, frame), c)
+
+    keys = [jax.random.fold_in(jax.random.PRNGKey(0), q) for q in range(q_n)]
+
+    # ---- sequential arm: Q independent run_search_scan runs ----
+    seq_steps, seq_results, seq_wall = [], [], 0.0
+    for q in range(q_n):
+        carry = init_carry(
+            init_state(chunks.length), init_matcher(max_results=4096), keys[q]
+        )
+        t0 = time.perf_counter()
+        out, _ = run_search_scan(
+            carry, chunks, detector=class_det(Q_CLASSES[q]),
+            result_limit=limit, max_steps=budget, cohorts=cohorts,
+            method="wilson_hilferty",
+        )
+        jax.block_until_ready(out.results)
+        seq_wall += time.perf_counter() - t0
+        seq_steps.append(int(out.step))
+        seq_results.append(int(out.results))
+
+    # ---- multi arm: one driver, one shared detector pass per round ----
+    carries = init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=4096),
+        jnp.stack(keys),
+    )
+    t0 = time.perf_counter()
+    multi, _, stats = run_search_multi(
+        carries, chunks, detector=det_all, select=select,
+        result_limits=limit, max_steps=budget, cohorts=cohorts,
+        method="wilson_hilferty", cache_frames=chunks.total_frames,
+    )
+    jax.block_until_ready(multi.results)
+    multi_wall = time.perf_counter() - t0
+    multi_results = [int(r) for r in multi.results]
+
+    seq_inv = sum(seq_steps)          # one detector call per sampled frame
+    multi_inv = stats["detector_invocations"]
+    seq_per_result = seq_inv / max(sum(seq_results), 1)
+    multi_per_result = multi_inv / max(sum(multi_results), 1)
+    ratio = seq_per_result / max(multi_per_result, 1e-9)
+
+    print("arm,queries,results,frames_sampled,detector_invocations,"
+          "det_per_result,steps_per_sec")
+    print(f"sequential,{q_n},{sum(seq_results)},{seq_inv},{seq_inv},"
+          f"{seq_per_result:.2f},{seq_inv / max(seq_wall, 1e-9):.0f}")
+    print(f"multi,{q_n},{sum(multi_results)},{stats['frames_sampled']},"
+          f"{multi_inv},{multi_per_result:.2f},"
+          f"{stats['frames_sampled'] / max(multi_wall, 1e-9):.0f}")
+    print(f"amortization,{q_n},cache_hits={stats['cache_hits']},"
+          f"rounds={stats['rounds']},ratio={ratio:.2f}x,"
+          f"{'OK' if ratio >= 2.0 else 'FAIL'}")
+    # per-query trajectories are bit-identical across arms (oracle detector)
+    assert multi_results == seq_results, (multi_results, seq_results)
+    assert ratio >= 2.0, f"amortization {ratio:.2f}x below the 2x gate"
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(quick="--quick" in sys.argv)

@@ -1,12 +1,13 @@
 """Benchmark harness entry: one section per paper table/figure.
 
-  bench_bias     -- paper 3.3.2 / Fig. 2 (estimator + Poisson validation)
-  bench_savings  -- paper Figs. 3-4 (frames-processed savings vs random+)
-  bench_batched  -- paper 3.7.1 (cohort batching) + straggler model
-  bench_sharded  -- sharded driver steps/sec at 1/2/4/8 shards + parity
-  bench_overhead -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
-  bench_kernels  -- kernel reference microbenchmarks (CSV)
-  bench_roofline -- Roofline table from dry-run artifacts
+  bench_bias       -- paper 3.3.2 / Fig. 2 (estimator + Poisson validation)
+  bench_savings    -- paper Figs. 3-4 (frames-processed savings vs random+)
+  bench_batched    -- paper 3.7.1 (cohort batching) + straggler model
+  bench_sharded    -- sharded driver steps/sec at 1/2/4/8 shards + parity
+  bench_multiquery -- Q=8 shared detector pass vs sequential (DESIGN.md §9)
+  bench_overhead   -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
+  bench_kernels    -- kernel reference microbenchmarks (CSV)
+  bench_roofline   -- Roofline table from dry-run artifacts
 """
 from __future__ import annotations
 
@@ -21,6 +22,7 @@ def main() -> None:
         bench_bias,
         bench_chunking,
         bench_kernels,
+        bench_multiquery,
         bench_overhead,
         bench_roofline,
         bench_savings,
@@ -33,6 +35,7 @@ def main() -> None:
         ("chunking(sec3.5)", bench_chunking.main),
         ("batched(sec3.7.1)", bench_batched.main),
         ("sharded(sec3.7.1)", lambda: bench_sharded.main(quick=quick)),
+        ("multiquery(sec9)", lambda: bench_multiquery.main(quick=quick)),
         ("overhead(fig6)", bench_overhead.main),
         ("kernels", bench_kernels.main),
         ("roofline", bench_roofline.main),

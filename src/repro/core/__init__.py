@@ -13,24 +13,42 @@ from repro.core.state import (
     DEFAULT_BETA0,
 )
 from repro.core.chunks import ChunkIndex, build_chunks, randomplus_frame
-from repro.core.thompson import choose_chunks, draw_scores, gamma_params
-from repro.core.matcher import MatcherState, init_matcher, match_and_update, pairwise_iou
+from repro.core.thompson import (
+    choose_chunks,
+    choose_chunks_batched,
+    draw_scores,
+    gamma_params,
+)
+from repro.core.matcher import (
+    MatcherState,
+    init_matcher,
+    init_matcher_multi,
+    match_and_update,
+    merge_matcher,
+    merge_matcher_checked,
+    pairwise_iou,
+)
 from repro.core.exsample import (
     ExSampleCarry,
     init_carry,
+    init_carry_multi,
+    stack_carries,
     exsample_step,
     exsample_batch_step,
     run_search,
     run_search_scan,
     run_search_sharded,
+    run_search_multi,
 )
 
 __all__ = [
     "SamplerState", "init_state", "apply_update", "apply_cross_chunk_decrement",
     "merge_states", "point_estimate", "DEFAULT_ALPHA0", "DEFAULT_BETA0",
     "ChunkIndex", "build_chunks", "randomplus_frame",
-    "choose_chunks", "draw_scores", "gamma_params",
-    "MatcherState", "init_matcher", "match_and_update", "pairwise_iou",
-    "ExSampleCarry", "init_carry", "exsample_step", "exsample_batch_step",
-    "run_search", "run_search_scan", "run_search_sharded",
+    "choose_chunks", "choose_chunks_batched", "draw_scores", "gamma_params",
+    "MatcherState", "init_matcher", "init_matcher_multi", "match_and_update",
+    "merge_matcher", "merge_matcher_checked", "pairwise_iou",
+    "ExSampleCarry", "init_carry", "init_carry_multi", "stack_carries",
+    "exsample_step", "exsample_batch_step",
+    "run_search", "run_search_scan", "run_search_sharded", "run_search_multi",
 ]

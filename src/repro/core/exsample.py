@@ -5,14 +5,16 @@ pytree so it can be (a) jitted and scanned for simulation-scale benchmarks,
 (b) driven frame-by-frame from the host around a real serving stack, and
 (c) sharded (see ``repro.core.distributed``).
 
-Three drivers share the step/process machinery (DESIGN.md §7-§8):
+Four drivers share the step/process machinery (DESIGN.md §7-§9):
 ``run_search`` is the host reference loop (one dispatch + one sync per
 step), ``run_search_scan`` is the device-resident ``lax.while_loop``
 production driver — identical (step, results) trajectory, one host sync
-total — and ``run_search_sharded`` is the mesh-scale variant: the same
+total — ``run_search_sharded`` is the mesh-scale variant: the same
 resident loop under ``shard_map`` with chunk statistics sharded over the
 ``data`` axis and per-shard matchers merged every ``sync_every`` rounds
-(eventual-consistency Thompson, DESIGN.md §8).
+(eventual-consistency Thompson, DESIGN.md §8) — and ``run_search_multi``
+advances Q concurrent queries (leading-[Q] carry) sharing one
+deduplicated + cached detector pass per round (DESIGN.md §9).
 
 Detector plug-in protocol:  ``detector(key, frame_id) -> Detections``
 (see ``repro.sim.oracle.Detections``).  The oracle/noisy/neural detectors
@@ -643,3 +645,316 @@ def run_search_sharded(
     buf_host = np.asarray(buf)  # the single device→host sync
     trace = [(int(s), int(r)) for s, r in buf_host[: int(tn)]]
     return out, trace
+
+
+# ---------------------------------------------------------------------------
+# Multi-query batched driver (§3.7.1 amortized across queries, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# per-query detection predicate: (query index i32[], single-frame Detections)
+# -> bool[D] keep-mask, applied on top of the detector's own validity
+SelectFn = Callable[[jax.Array, "Detections"], jax.Array]
+
+
+def stack_carries(carries) -> ExSampleCarry:
+    """Stack Q independent ``ExSampleCarry`` trees into one multi-query
+    carry with a leading [Q] axis on every leaf (static fields must agree)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+
+
+def init_carry_multi(
+    sampler: SamplerState, matcher: MatcherState, keys: jax.Array
+) -> ExSampleCarry:
+    """Fresh Q-query carry: ``keys`` is a [Q]-leading PRNG key array; the
+    (single-query) sampler and matcher are broadcast to every query
+    (``matcher.broadcast_leading``, same layout as ``init_matcher_multi``)."""
+    from repro.core.matcher import broadcast_leading
+
+    q = keys.shape[0]
+    return ExSampleCarry(
+        sampler=broadcast_leading(sampler, q),
+        matcher=broadcast_leading(matcher, q),
+        key=keys,
+        step=jnp.zeros((q,), jnp.int32),
+        results=jnp.zeros((q,), jnp.int32),
+    )
+
+
+def _multi_round(
+    mc: ExSampleCarry,
+    cache,
+    chunks: ChunkIndex,
+    active: jax.Array,       # bool[Q] — round-start liveness per query
+    *,
+    detector: DetectorFn,
+    select: SelectFn | None,
+    cohorts: int,
+    method: str,
+):
+    """One synchronized multi-query round (DESIGN.md §9).
+
+    Every active query draws ``cohorts`` Thompson picks from ITS OWN
+    statistics (one batched ``choose_chunks_batched`` call), the union of
+    the Q·C sampled frames is deduplicated — and filtered through the
+    shared ``DetectionCache`` when enabled — into one detector pass, and
+    the detections scatter back so each query matches/updates against
+    exactly its own cohort's slots.  Per query the fold replicates
+    ``exsample_batch_step`` bit-for-bit: chunk choice from round-start
+    statistics, within-round random+ ranks advancing sequentially
+    (``occ``), matcher folded frame-by-frame, additive sampler deltas.
+
+    Finished queries stay shape-stable: their slots are excluded from the
+    dedup (never detected on their behalf), their detections are masked
+    invalid, their sampler/step/key updates are gated to zero.
+
+    Returns ``(mc', cache', fresh_detections i32[], cache_hits i32[])`` —
+    ``fresh_detections`` counts what a real deployment would actually send
+    through the detector this round (unique, uncached, live frames); the
+    simulator still evaluates the full padded batch for static shapes.
+    """
+    from repro.serve.batcher import cache_insert, cache_lookup, dedup_first_index
+
+    q_n = mc.key.shape[0]
+    c = cohorts
+    b = q_n * c
+    keys = jax.vmap(lambda k: jax.random.split(k, 3))(mc.key)
+    key_next, k_choice, k_det = keys[:, 0], keys[:, 1], keys[:, 2]
+
+    chunk_ids = thompson.choose_chunks_batched(
+        k_choice, mc.sampler, cohorts=c, method=method
+    )                                                        # i32[Q, C]
+    # within-round rank advance: cohort j of query q reads n AFTER its own
+    # earlier same-chunk picks incremented it (exsample_batch_step's
+    # sequential _process_frame order), so occ is the per-query count of
+    # earlier cohorts that picked the same chunk
+    eq = chunk_ids[:, :, None] == chunk_ids[:, None, :]      # [Q, C, C]
+    occ = jnp.sum(jnp.tril(eq, -1), axis=-1)                 # [Q, C]
+    n0 = jnp.take_along_axis(mc.sampler.n, chunk_ids, axis=-1)
+    ranks = (n0 + occ.astype(n0.dtype)).astype(jnp.int32)
+    frame_ids = randomplus_frame(chunks, chunk_ids, ranks)   # i32[Q, C]
+
+    if c == 1:
+        det_keys = k_det[:, None]        # exsample_step uses k_det unsplit
+    else:
+        det_keys = jax.vmap(lambda k: jax.random.split(k, c))(k_det)
+    det_keys_flat = det_keys.reshape((b,) + det_keys.shape[2:])
+    flat_frames = frame_ids.reshape(b)
+    flat_valid = jnp.repeat(active, c)
+
+    # ---- cross-query dedup + cache: one detector batch for the union ----
+    first_idx = dedup_first_index(flat_frames, flat_valid)
+    is_rep = (first_idx == jnp.arange(b, dtype=jnp.int32)) & flat_valid
+    fresh = jax.vmap(detector)(det_keys_flat, flat_frames)
+    if cache is not None:
+        hit, cached = cache_lookup(cache, flat_frames)
+        expand = lambda m, x: m.reshape(m.shape + (1,) * (x.ndim - 1))
+        resolved = jax.tree.map(
+            lambda cv, fv: jnp.where(expand(hit, fv), cv, fv), cached, fresh
+        )
+        need = is_rep & ~hit
+        cache = cache_insert(cache, flat_frames, fresh, need)
+    else:
+        hit = jnp.zeros((b,), bool)
+        resolved = fresh
+        need = is_rep
+    # scatter-back: every slot gathers its representative's detections, so
+    # each query consumes detections of exactly the frame it sampled
+    dets_flat = jax.tree.map(lambda x: x[first_idx], resolved)
+    fresh_calls = jnp.sum(need).astype(jnp.int32)
+    cache_hits = jnp.sum(is_rep & hit).astype(jnp.int32)
+
+    # ---- per-query sequential matcher/sampler fold over own slots only ----
+    dets_q = jax.tree.map(
+        lambda x: x.reshape((q_n, c) + x.shape[1:]), dets_flat
+    )
+
+    def fold_query(qi, sampler, matcher, results, dets_c, cids, fids, act):
+        def bodyj(j, st):
+            sampler, matcher, results = st
+            d = jax.tree.map(lambda x: x[j], dets_c)
+            valid = d.valid & act
+            if select is not None:
+                valid = valid & select(qi, d)
+            mres = match_and_update(
+                matcher, d.boxes, d.feats, valid,
+                chunks.video_id[cids[j]], fids[j], cids[j],
+            )
+            d1_local = mres.d1 - mres.cross_chunk
+            sampler = apply_update(
+                sampler, cids[j], mres.d0, d1_local,
+                samples=act.astype(sampler.n.dtype),
+            )
+            valid_home = mres.cross_home >= 0
+            sampler = apply_cross_chunk_decrement(
+                sampler,
+                jnp.where(valid_home, mres.cross_home, 0),
+                valid_home.astype(sampler.n1.dtype),
+            )
+            return sampler, mres.new_state, results + mres.d0
+
+        return jax.lax.fori_loop(0, c, bodyj, (sampler, matcher, results))
+
+    sampler, matcher, results = jax.vmap(fold_query)(
+        jnp.arange(q_n, dtype=jnp.int32), mc.sampler, mc.matcher, mc.results,
+        dets_q, chunk_ids, frame_ids, active,
+    )
+    mc = ExSampleCarry(
+        sampler=sampler,
+        matcher=matcher,
+        # finished queries keep their key frozen so their final carry is
+        # bit-identical to their own solo run
+        key=jnp.where(active[:, None], key_next, mc.key),
+        step=mc.step + c * active.astype(jnp.int32),
+        results=results,
+    )
+    return mc, cache, fresh_calls, cache_hits
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "detector", "select", "cohorts", "method", "max_steps", "trace_every",
+    ),
+)
+def _search_multi_device(
+    mc: ExSampleCarry,
+    chunks: ChunkIndex,
+    result_limits: jax.Array,    # i32[Q]
+    cache,
+    *,
+    detector: DetectorFn,
+    select: SelectFn | None,
+    cohorts: int,
+    method: str,
+    max_steps: int,
+    trace_every: int,
+):
+    """Device-resident multi-query loop: runs rounds until EVERY query is
+    finished; per query the continue / trace semantics mirror
+    ``_search_scan_device`` exactly (same cap formula, boundary-crossing
+    checkpoints, unconditional final entry)."""
+    q_n = mc.step.shape[0]
+    cap = (max_steps + cohorts - 1) // trace_every + 1 if trace_every else 1
+    buf0 = jnp.zeros((q_n, cap, 2), jnp.int32)
+    n0 = jnp.zeros((q_n,), jnp.int32)
+    z32 = jnp.zeros((), jnp.int32)
+
+    def live_mask(c):
+        return (
+            (c.results < result_limits)
+            & (c.step < max_steps)
+            & ~jnp.all(c.sampler.exhausted(), axis=-1)
+        )
+
+    def cond(state):
+        return jnp.any(live_mask(state[0]))
+
+    def body(state):
+        c, cache, buf, n, calls, hits, rounds = state
+        active = live_mask(c)
+        c2, cache, fresh, hit = _multi_round(
+            c, cache, chunks, active,
+            detector=detector, select=select, cohorts=cohorts, method=method,
+        )
+        if trace_every:
+            crossed = (c2.step // trace_every) > (c.step // trace_every)
+            entry = jnp.stack([c2.step, c2.results], axis=-1)   # [Q, 2]
+            idx = jnp.where(crossed, n, cap)
+            buf = jax.vmap(lambda bq, i, e: bq.at[i].set(e, mode="drop"))(
+                buf, idx, entry
+            )
+            n = n + crossed.astype(jnp.int32)
+        return c2, cache, buf, n, calls + fresh, hits + hit, rounds + 1
+
+    c, cache, buf, n, calls, hits, rounds = jax.lax.while_loop(
+        cond, body, (mc, cache, buf0, n0, z32, z32, z32)
+    )
+    final = jnp.stack([c.step, c.results], axis=-1)
+    buf = jax.vmap(lambda bq, i, e: bq.at[i].set(e, mode="drop"))(
+        buf, jnp.minimum(n, cap - 1), final
+    )
+    n = jnp.minimum(n + 1, cap)
+    return c, buf, n, calls, hits, rounds
+
+
+def run_search_multi(
+    carries: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    result_limits,
+    max_steps: int,
+    cohorts: int = 1,
+    method: str = "exact",
+    trace_every: int = 0,
+    select: SelectFn | None = None,
+    cache_frames: int = 0,
+):
+    """Q concurrent queries over one repository, one decode/detect pass per
+    round (DESIGN.md §9).
+
+    ``carries`` is a stacked ``ExSampleCarry`` (leading [Q] axis on every
+    leaf — ``init_carry_multi`` / ``stack_carries``); each query owns its
+    sampler statistics, matcher memory, PRNG key, result counter and
+    ``result_limits[q]``.  Per round the union of the Q cohorts' frames is
+    deduplicated (plus an optional cross-round ``DetectionCache`` of
+    ``cache_frames`` slots) into one detector batch; each query then
+    matches and updates against its own cohort's slots only.  Queries that
+    hit their limit / the step budget / exhaustion mask out of
+    choose/sample but stay shape-stable until every query finishes.
+
+    ``select(q, dets) -> bool[D]`` optionally restricts a shared
+    class-agnostic detector to each query's predicate (the Focus-style
+    share-one-ingest-pass economics); ``None`` keeps the detector's own
+    validity.
+
+    Per query the trajectory is bit-identical to its own
+    ``run_search_scan`` run with the same key and a deterministic detector
+    — dedup and caching change WHICH invocations happen, never the values
+    a query consumes (with stochastic detectors, frames shared within a
+    round or served from cache reuse one draw; that sharing is the point).
+
+    Returns ``(carries', traces, stats)``: per-query recall traces (same
+    semantics as ``run_search_scan``) and accounting —
+    ``detector_invocations`` (unique, uncached frames actually detected),
+    ``cache_hits``, ``rounds``, ``frames_sampled`` (Σ per-query steps,
+    what Q sequential runs would have paid).
+    """
+    q_n = int(carries.step.shape[0])
+    limits = jnp.broadcast_to(
+        jnp.asarray(result_limits, jnp.int32), (q_n,)
+    )
+    if cache_frames:
+        from repro.serve.batcher import init_detection_cache
+
+        struct = jax.eval_shape(
+            detector, jax.random.PRNGKey(0), jnp.zeros((), jnp.int32)
+        )
+        cache = init_detection_cache(struct, cache_frames)
+    else:
+        cache = None
+    out, buf, n, calls, hits, rounds = _search_multi_device(
+        carries,
+        chunks,
+        limits,
+        cache,
+        detector=detector,
+        select=select,
+        cohorts=cohorts,
+        method=method,
+        max_steps=max_steps,
+        trace_every=trace_every,
+    )
+    buf_host = np.asarray(buf)  # the single device→host sync
+    n_host = np.asarray(n)
+    traces = [
+        [(int(s), int(r)) for s, r in buf_host[q][: int(n_host[q])]]
+        for q in range(q_n)
+    ]
+    stats = {
+        "detector_invocations": int(calls),
+        "cache_hits": int(hits),
+        "rounds": int(rounds),
+        "frames_sampled": int(np.asarray(out.step).sum()),
+    }
+    return out, traces, stats

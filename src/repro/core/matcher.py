@@ -37,6 +37,7 @@ class MatcherState:
     chunk: jax.Array        # i32[R]     — chunk of first sighting (§3.4)
     times_seen: jax.Array   # i32[R]     — 0 = empty slot
     cursor: jax.Array       # i32[]      — ring insert position
+    total_inserted: jax.Array  # i32[]   — monotone insertion count (never wraps)
     iou_thresh: float = dataclasses.field(metadata=dict(static=True), default=0.5)
     time_gate: int = dataclasses.field(metadata=dict(static=True), default=900)
     feat_thresh: float = dataclasses.field(metadata=dict(static=True), default=-1.0)
@@ -62,10 +63,27 @@ def init_matcher(
         chunk=jnp.full((max_results,), -1, jnp.int32),
         times_seen=jnp.zeros((max_results,), jnp.int32),
         cursor=jnp.zeros((), jnp.int32),
+        total_inserted=jnp.zeros((), jnp.int32),
         iou_thresh=iou_thresh,
         time_gate=time_gate,
         feat_thresh=feat_thresh,
     )
+
+
+def broadcast_leading(tree, num_queries: int):
+    """Leading-[Q] broadcast of every array leaf — the shared layout
+    transform behind the multi-query carry (DESIGN.md §9); static/aux
+    fields pass through untouched."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_queries,) + x.shape), tree
+    )
+
+
+def init_matcher_multi(num_queries: int, **kwargs) -> MatcherState:
+    """Q independent result memories as ONE pytree with a leading [Q] axis
+    on every array leaf — the matcher half of the multi-query carry
+    (DESIGN.md §9).  Static thresholds are shared across queries."""
+    return broadcast_leading(init_matcher(**kwargs), num_queries)
 
 
 def pairwise_iou(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -173,6 +191,7 @@ def match_and_update(
         chunk=chunk_mem,
         times_seen=seen_mem,
         cursor=(state.cursor + num_new) % state.capacity,
+        total_inserted=state.total_inserted + num_new,
     )
     return MatchResult(
         d0=d0,
@@ -186,6 +205,44 @@ def match_and_update(
 
 def num_results(state: MatcherState) -> jax.Array:
     return jnp.sum(state.times_seen > 0).astype(jnp.int32)
+
+
+class MergeStats(NamedTuple):
+    """Ring-pressure diagnostics of one ``merge_matcher`` application."""
+
+    inserted: jax.Array   # i32[] — TRUE insertions src made since snap
+    overflow: jax.Array   # bool[] — insertions ≥ capacity: the src ring
+    #                       wrapped and silently dropped entries, so the
+    #                       merge window (a mod-capacity cursor delta)
+    #                       aliases and cannot recover them
+    clobbered: jax.Array  # i32[] — live dst entries this merge overwrites
+
+
+def merge_stats(dst: MatcherState, src: MatcherState, snap: MatcherState) -> MergeStats:
+    """Ring-wrap guard (ROADMAP): ``merge_matcher`` assumes fewer insertions
+    per merge than capacity; the cursor delta it appends from is taken mod
+    capacity, so an overflowing worker silently loses ``capacity·k``
+    entries.  The monotone ``total_inserted`` counter makes the true
+    insertion count observable — callers surface it as a high-water mark
+    and raise/flag on overflow instead of wrapping (see
+    ``repro.core.runtime.AsyncSearchDriver._merge``)."""
+    cap = dst.capacity
+    inserted = src.total_inserted - snap.total_inserted
+    n_new = inserted % cap
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    dst_slot_hit = (idx - dst.cursor) % cap < n_new
+    clobbered = jnp.sum(dst_slot_hit & (dst.times_seen > 0)).astype(jnp.int32)
+    return MergeStats(
+        inserted=inserted, overflow=inserted >= cap, clobbered=clobbered
+    )
+
+
+@jax.jit
+def merge_matcher_checked(
+    dst: MatcherState, src: MatcherState, snap: MatcherState
+) -> tuple[MatcherState, MergeStats]:
+    """``merge_matcher`` plus its ``MergeStats`` — one fused jitted call."""
+    return merge_matcher(dst, src, snap), merge_stats(dst, src, snap)
 
 
 @jax.jit
@@ -209,7 +266,9 @@ def merge_matcher(
     Duplicate entries across overlapping workers remain possible (two
     workers can both insert the same object); that is the documented
     at-most-once-*effect* tolerance.  Assumes fewer insertions per merge
-    than ``capacity`` (cohort sizes ≪ ring capacity)."""
+    than ``capacity`` (cohort sizes ≪ ring capacity) — violations are
+    detectable via ``merge_stats``/``merge_matcher_checked`` (overflow
+    flag + high-water insertion count) rather than silently wrapping."""
     cap = dst.capacity
     idx = jnp.arange(cap, dtype=jnp.int32)
     n_new = (src.cursor - snap.cursor) % cap
@@ -242,4 +301,6 @@ def merge_matcher(
         chunk=put(dst.chunk, src.chunk),
         times_seen=put(times, src.times_seen),
         cursor=(dst.cursor + n_new) % cap,
+        total_inserted=dst.total_inserted
+        + (src.total_inserted - snap.total_inserted),
     )

@@ -35,9 +35,17 @@ import numpy as np
 from repro.core.chunks import ChunkIndex
 from repro.core.distributed import merge_deltas
 from repro.core.exsample import ExSampleCarry, _process_frame
-from repro.core.matcher import MatcherState, merge_matcher
+from repro.core.matcher import MatcherState, merge_matcher_checked
 from repro.core.thompson import choose_chunks
 from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+
+class MatcherRingOverflow(RuntimeError):
+    """A worker inserted ≥ capacity results between snapshot and merge: the
+    ring wrapped, entries are unrecoverable, and a silent merge would
+    under-count.  Raised instead of wrapping (ROADMAP ring-wrap guard);
+    deployments should size ``max_results`` ≫ cohort result rates or merge
+    more often."""
 
 
 @partial(jax.jit, static_argnames=("detector",))
@@ -111,6 +119,7 @@ class AsyncSearchDriver:
         self.num_workers = num_workers
         self.stats = {
             "cohorts": 0, "reissues": 0, "merges": 0, "duplicate_drops": 0,
+            "merge_high_water": 0,
         }
 
     # ---- driver side -------------------------------------------------------
@@ -142,7 +151,13 @@ class AsyncSearchDriver:
         ``results`` and matcher insertions.  The pending set is
         ``self._inflight`` — the first completion removes the cohort under
         the lock, any later completion of the same cohort is dropped (and
-        counted in ``stats["duplicate_drops"]``)."""
+        counted in ``stats["duplicate_drops"]``).
+
+        Ring-wrap guard (ROADMAP): the per-merge insertion count is
+        surfaced as ``stats["merge_high_water"]`` and a merge whose
+        insertions reached the ring capacity raises
+        ``MatcherRingOverflow`` instead of silently aliasing the append
+        window."""
         with self._lock:
             if res.cohort_id not in self._inflight:
                 self.stats["duplicate_drops"] += 1
@@ -151,7 +166,18 @@ class AsyncSearchDriver:
             sampler = merge_deltas(self.carry.sampler, res.delta_n1, res.delta_n)
             matcher = self.carry.matcher
             if res.matcher is not None:
-                matcher = merge_matcher(matcher, res.matcher, res.snap_matcher)
+                matcher, mstats = merge_matcher_checked(
+                    matcher, res.matcher, res.snap_matcher
+                )
+                self.stats["merge_high_water"] = max(
+                    self.stats["merge_high_water"], int(mstats.inserted)
+                )
+                if bool(mstats.overflow):
+                    raise MatcherRingOverflow(
+                        f"cohort {res.cohort_id}: {int(mstats.inserted)} "
+                        f"insertions into a capacity-"
+                        f"{matcher.capacity} result ring"
+                    )
             self.carry = dataclasses.replace(
                 self.carry,
                 sampler=sampler,
@@ -233,21 +259,25 @@ class AsyncSearchDriver:
         # keep the pipeline full: workers+1 outstanding cohorts
         for _ in range(self.num_workers + 1):
             self._issue_cohort()
-        while (
-            int(self.carry.results) < self.result_limit
-            and int(self.carry.step) < self.max_frames
-        ):
-            try:
-                res = self._results.get(timeout=60.0)
-            except queue.Empty:
-                break
-            self._merge(res)
-            actions = self.monitor.sweep(time.monotonic())
-            for cid in actions["reissue_cohorts"]:
-                self._reissue(cid)
-            self._issue_cohort()
-        for _ in threads:
-            self._work.put(None)
-        for t in threads:
-            t.join(timeout=5.0)
+        try:
+            while (
+                int(self.carry.results) < self.result_limit
+                and int(self.carry.step) < self.max_frames
+            ):
+                try:
+                    res = self._results.get(timeout=60.0)
+                except queue.Empty:
+                    break
+                self._merge(res)
+                actions = self.monitor.sweep(time.monotonic())
+                for cid in actions["reissue_cohorts"]:
+                    self._reissue(cid)
+                self._issue_cohort()
+        finally:
+            # always shut the pool down — a raising merge (e.g.
+            # MatcherRingOverflow) must not leak blocked worker threads
+            for _ in threads:
+                self._work.put(None)
+            for t in threads:
+                t.join(timeout=5.0)
         return self.carry

@@ -92,6 +92,42 @@ def choose_chunks(
     return jnp.argmax(scores, axis=-1).astype(jnp.int32)
 
 
+@partial(jax.jit, static_argnames=("cohorts", "method"))
+def choose_chunks_batched(
+    keys: jax.Array,
+    state: SamplerState,
+    *,
+    cohorts: int = 1,
+    method: str = "exact",
+) -> jax.Array:
+    """Leading-[Q] batched ``choose_chunks`` for the multi-query driver
+    (DESIGN.md §9): per-query keys ``keys[Q]`` and per-query statistics
+    (every ``state`` leaf carries a leading [Q] axis) decided in ONE
+    batched call.  Returns i32[Q, cohorts].
+
+    Contract: row q is bit-identical to ``choose_chunks(keys[q],
+    state_q, cohorts, method)`` — ``vmap`` of the PRNG + score path is
+    per-lane exact, which is what makes the Q=1 multi-query parity test
+    meaningful.  The pallas path stays ONE kernel launch (per-query alpha
+    rows, grid [Q·C, M-blocks]) rather than Q serial kernel calls.
+    """
+    if method in ("exact", "wilson_hilferty"):
+        f = partial(choose_chunks, cohorts=cohorts, method=method)
+        return jax.vmap(f)(keys, state)
+    if method == "pallas":
+        from repro.kernels.thompson.ops import choose_batched
+
+        alpha, beta = gamma_params(state)            # [Q, M], pre-clamped
+        alpha = jnp.where(state.exhausted(), -1.0, alpha)
+        m = alpha.shape[-1]
+        z = jax.vmap(
+            lambda k: jax.random.normal(k, (cohorts, m), dtype=alpha.dtype)
+        )(keys)
+        idx, _ = choose_batched(alpha, beta, z)
+        return idx
+    raise ValueError(f"unknown Thompson method: {method!r}")
+
+
 def greedy_chunks(state: SamplerState, *, cohorts: int = 1) -> jax.Array:
     """Greedy baseline: always argmax of the point estimate (no posterior
     noise).  The paper shows this underperforms Thompson because it cannot

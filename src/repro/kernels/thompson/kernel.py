@@ -108,3 +108,53 @@ def thompson_choose(
         interpret=interpret,
     )(alpha.reshape(1, m), beta.reshape(1, m), z)
     return idx[:, 0], val[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def thompson_choose_batched(
+    alpha: jax.Array,     # f32[Q, M] — one statistics row per query
+    beta: jax.Array,      # f32[Q, M]
+    z: jax.Array,         # f32[Q, C, M] — per-query cohort normals
+    *,
+    block_m: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-query variant (DESIGN.md §9): Q queries × C cohorts reduced in
+    ONE pallas_call.  The cohort rows flatten to a (Q·C, M-blocks) grid and
+    each row's block spec indexes its query's alpha/beta row (``r // C``),
+    so the whole multi-query Thompson decision is a single kernel launch —
+    never a Python loop over queries.  Returns (idx i32[Q, C], val
+    f32[Q, C]); row (q, c) is bit-identical to ``thompson_choose`` on
+    query q's statistics.
+    """
+    qn, c, m = z.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        alpha = jnp.concatenate(
+            [alpha, jnp.full((qn, pad), -1.0, alpha.dtype)], axis=1
+        )
+        beta = jnp.concatenate([beta, jnp.ones((qn, pad), beta.dtype)], axis=1)
+        z = jnp.concatenate([z, jnp.zeros((qn, c, pad), z.dtype)], axis=2)
+        m += pad
+
+    idx, val = pl.pallas_call(
+        functools.partial(_thompson_kernel, block_m=bm),
+        grid=(qn * c, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda r, mj: (r // c, mj)),
+            pl.BlockSpec((1, bm), lambda r, mj: (r // c, mj)),
+            pl.BlockSpec((1, bm), lambda r, mj: (r, mj)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda r, mj: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r, mj: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn * c, 1), jnp.int32),
+            jax.ShapeDtypeStruct((qn * c, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 2), jnp.float32)],
+        interpret=interpret,
+    )(alpha, beta, z.reshape(qn * c, m))
+    return idx[:, 0].reshape(qn, c), val[:, 0].reshape(qn, c)

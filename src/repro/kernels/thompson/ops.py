@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.thompson.kernel import thompson_choose
+from repro.kernels.thompson.kernel import thompson_choose, thompson_choose_batched
 from repro.kernels.thompson.ref import thompson_ref
 
 
@@ -14,3 +14,19 @@ def choose(alpha, beta, z, *, block_m: int = 1024, interpret: bool | None = None
             return thompson_ref(alpha, beta, z)
         interpret = False
     return thompson_choose(alpha, beta, z, block_m=block_m, interpret=interpret)
+
+
+def choose_batched(
+    alpha, beta, z, *, block_m: int = 1024, interpret: bool | None = None
+):
+    """Multi-query choice: alpha/beta f32[Q, M], z f32[Q, C, M] →
+    (idx i32[Q, C], val f32[Q, C]).  One batched kernel launch on TPU; the
+    vmapped jnp reference elsewhere (bit-identical per query)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        if not on_tpu:
+            return jax.vmap(thompson_ref)(alpha, beta, z)
+        interpret = False
+    return thompson_choose_batched(
+        alpha, beta, z, block_m=block_m, interpret=interpret
+    )

@@ -7,11 +7,17 @@ resumable state.
 
   PYTHONPATH=src python -m repro.launch.search --limit 50 --cohorts 16
   PYTHONPATH=src python -m repro.launch.search --limit 50 --mesh 4
+  PYTHONPATH=src python -m repro.launch.search --limit 20 --queries 0 1 2 3
 
 ``--mesh N`` runs the sharded device-resident driver
 (``run_search_sharded``, DESIGN.md §8) on an N-way ``data`` mesh.  When
 the host exposes fewer devices, ``main()`` re-execs into a child with
 simulated host devices (``launch.mesh.ensure_host_devices``).
+
+``--queries c0 c1 …`` runs one concurrent search per listed query class
+through ``run_search_multi`` (DESIGN.md §9): a single class-agnostic
+detector pass per round is deduplicated and cached across the queries,
+and each query filters the shared detections to its own class.
 """
 from __future__ import annotations
 
@@ -20,21 +26,63 @@ import sys
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.exsample_paper import bdd, dashcam
 from repro.core import (
     init_carry,
+    init_carry_multi,
     init_matcher,
     init_state,
     run_search,
+    run_search_multi,
     run_search_scan,
     run_search_sharded,
 )
 from repro.core.baselines import FrameSchedule, run_schedule
 from repro.sim import generate
 from repro.sim.costmodel import CostRates, sampling_cost
-from repro.sim.oracle import noisy_detect, oracle_detect
+from repro.sim.oracle import class_select, noisy_detect, oracle_detect
 from repro.train.checkpoint import CheckpointManager
+
+
+def _run_multi(args, repo, chunks) -> None:
+    """--queries path: Q concurrent class searches through one shared,
+    deduplicated + cached detector pass per round (DESIGN.md §9)."""
+    q_n = len(args.queries)
+    if args.detector == "oracle":
+        det = lambda key, frame: oracle_detect(repo, frame, query_class=None)
+    else:
+        det = lambda key, frame: noisy_detect(key, repo, frame, query_class=None)
+    select = class_select(repo, args.queries)
+
+    keys = jnp.stack([
+        jax.random.fold_in(jax.random.PRNGKey(args.seed), q) for q in range(q_n)
+    ])
+    carries = init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=8192), keys
+    )
+    cache = args.cache_frames if args.cache_frames >= 0 else chunks.total_frames
+    t0 = time.time()
+    out, traces, stats = run_search_multi(
+        carries, chunks, detector=det, select=select,
+        result_limits=args.limit, max_steps=args.max_steps,
+        cohorts=args.cohorts, trace_every=256, cache_frames=cache,
+    )
+    wall = time.time() - t0
+    steps = [int(s) for s in out.step]
+    results = [int(r) for r in out.results]
+    for q in range(q_n):
+        print(f"  query class {args.queries[q]}: {results[q]} results / "
+              f"{steps[q]:,} frames")
+    inv = stats["detector_invocations"]
+    rates = CostRates()
+    print(f"ExSample multi-query (Q={q_n}): {sum(results)} results / "
+          f"{stats['frames_sampled']:,} frames sampled / {inv:,} detector "
+          f"invocations ({stats['cache_hits']:,} cache hits, "
+          f"{stats['frames_sampled'] / max(inv, 1):.2f}x amortization) / "
+          f"est. {sampling_cost(inv, rates).total_s:.0f} gpu·s "
+          f"(driver wall {wall:.1f}s)")
 
 
 def main() -> None:
@@ -56,6 +104,15 @@ def main() -> None:
     ap.add_argument("--sync-every", type=int, default=1,
                     help="rounds between sampler/matcher merges on the "
                          "sharded driver (eventual-consistency Thompson)")
+    ap.add_argument("--queries", type=int, nargs="+", default=None,
+                    metavar="CLASS",
+                    help="multi-query mode (DESIGN.md §9): one concurrent "
+                         "search per listed query class, sharing a single "
+                         "deduplicated+cached class-agnostic detector pass "
+                         "per round (run_search_multi)")
+    ap.add_argument("--cache-frames", type=int, default=-1,
+                    help="detection-cache capacity for --queries "
+                         "(-1 = one slot per repository frame, 0 = off)")
     ap.add_argument("--baseline", action="store_true",
                     help="also run random+ for comparison")
     ap.add_argument("--seed", type=int, default=0)
@@ -76,6 +133,10 @@ def main() -> None:
     repo, chunks = generate(setup.repo)
     print(f"{args.dataset}: {chunks.total_frames:,} frames / "
           f"{chunks.num_chunks} chunks / {repo.num_instances} instances")
+
+    if args.queries:
+        _run_multi(args, repo, chunks)
+        return
 
     if args.detector == "oracle":
         det = lambda key, frame: oracle_detect(

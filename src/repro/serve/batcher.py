@@ -6,13 +6,22 @@ batches (static shapes ⇒ one compilation), padding with sentinel frames
 whose results are dropped.  It also implements the straggler policy from
 DESIGN.md §5: a cohort is *never* a barrier — late frames just join a
 later batch, which is sound because sampler updates commute (§3.7.1).
+
+The device-side half of the same machinery serves the multi-query driver
+(DESIGN.md §9): ``dedup_first_index`` collapses the union of several
+queries' cohort frames into one detector batch without dropping any slot,
+and ``DetectionCache`` is a direct-mapped, device-resident cache of raw
+detector output so a frame decoded+detected for one query is reused by
+every later query that samples it (the Focus/EKO shared-ingest economics).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Iterable, Optional
+from typing import Any, Iterable, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -80,3 +89,90 @@ class RequestBatcher:
         if not b:
             return 1.0
         return self.stats["frames"] / (b * self.batch_size)
+
+    def padding_fraction(self) -> float:
+        """Fraction of emitted device slots that were sentinel padding —
+        the complement of ``occupancy`` over the batches actually emitted
+        (0.0 before any batch has been emitted)."""
+        b = self.stats["batches"]
+        if not b:
+            return 0.0
+        return self.stats["padded_slots"] / (b * self.batch_size)
+
+
+# ---------------------------------------------------------------------------
+# Device-side dedup + detection cache (multi-query driver, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def dedup_first_index(frame_ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """i32[B] — for each slot, the index of the FIRST valid slot holding the
+    same frame id (its dedup representative); invalid slots map to
+    themselves.
+
+    Every valid slot therefore gathers detections of exactly its own frame
+    (no frame a query sampled is ever dropped), and ``first_idx[i] == i``
+    marks the one representative per distinct valid frame (no frame is
+    detected, or counted, twice in a batch).  O(B²) compare — B = Q·C
+    cohort slots, small by construction.
+    """
+    b = frame_ids.shape[0]
+    idx = jnp.arange(b, dtype=jnp.int32)
+    same = (frame_ids[:, None] == frame_ids[None, :]) & valid[None, :]
+    first = jnp.min(jnp.where(same, idx[None, :], b), axis=1).astype(jnp.int32)
+    return jnp.where(valid & (first < b), first, idx)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DetectionCache:
+    """Direct-mapped device-resident cache of raw detector output.
+
+    ``tag[s]`` holds the frame id cached in slot ``s`` (-1 = empty);
+    ``store`` is the detector's output pytree with a leading [capacity]
+    axis.  Frames map to slots by ``frame % capacity``, so a capacity ≥
+    the repository's frame count is exact while smaller capacities trade
+    memory for evictions — the production knob.
+    """
+
+    tag: jax.Array   # i32[S] — cached frame id, -1 = empty
+    store: Any       # detection pytree, each leaf [S, ...]
+
+    @property
+    def capacity(self) -> int:
+        return self.tag.shape[0]
+
+
+def init_detection_cache(det_struct: Any, capacity: int) -> DetectionCache:
+    """Empty cache for a detector whose (single-frame) output shapes are
+    ``det_struct`` (e.g. from ``jax.eval_shape(detector, key, frame)``)."""
+    store = jax.tree.map(
+        lambda s: jnp.zeros((capacity,) + tuple(s.shape), s.dtype), det_struct
+    )
+    return DetectionCache(tag=jnp.full((capacity,), -1, jnp.int32), store=store)
+
+
+def cache_lookup(cache: DetectionCache, frame_ids: jax.Array):
+    """(hit bool[B], detections pytree with leading [B]) for each frame."""
+    slot = frame_ids % cache.capacity
+    hit = cache.tag[slot] == frame_ids
+    vals = jax.tree.map(lambda x: x[slot], cache.store)
+    return hit, vals
+
+
+def cache_insert(
+    cache: DetectionCache, frame_ids: jax.Array, dets: Any, mask: jax.Array
+) -> DetectionCache:
+    """Insert ``dets`` (leading [B]) for masked frames.  When two distinct
+    masked frames collide on one cache slot within a batch the first wins —
+    scatter order over duplicate indices is otherwise unspecified."""
+    s = cache.capacity
+    slot = (frame_ids % s).astype(jnp.int32)
+    first = dedup_first_index(slot, mask)
+    keep = mask & (first == jnp.arange(slot.shape[0], dtype=jnp.int32))
+    tgt = jnp.where(keep, slot, s)
+    tag = cache.tag.at[tgt].set(frame_ids, mode="drop")
+    store = jax.tree.map(
+        lambda st, v: st.at[tgt].set(v, mode="drop"), cache.store, dets
+    )
+    return DetectionCache(tag=tag, store=store)

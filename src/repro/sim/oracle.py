@@ -46,11 +46,45 @@ def _topk_slots(
 
 
 def oracle_detect(
-    repo: Repository, frame: jax.Array, *, query_class: int, max_dets: int = 16
+    repo: Repository, frame: jax.Array, *, query_class: int | None, max_dets: int = 16
 ) -> Detections:
-    """Perfect detector for one query class."""
-    mask = instances_visible(repo, frame) & (repo.inst_class == query_class)
+    """Perfect detector for one query class — or, with ``query_class=None``,
+    a CLASS-AGNOSTIC detector emitting every visible instance.  The latter
+    is the multi-query sharing mode (DESIGN.md §9): one detector pass whose
+    raw output each query filters down to its own predicate via the
+    driver's ``select`` hook."""
+    mask = instances_visible(repo, frame)
+    if query_class is not None:
+        mask = mask & (repo.inst_class == query_class)
     return _topk_slots(repo, frame, mask, max_dets)
+
+
+def class_select(repo: Repository, query_classes):
+    """Per-query predicate over CLASS-AGNOSTIC detections for the
+    multi-query driver (DESIGN.md §9): ``select(q, dets) -> bool[D]`` keeps
+    detections whose ground-truth instance belongs to ``query_classes[q]``.
+    Detections without an instance id (noisy false positives, inst_id=-2)
+    carry no class and are rejected by every query in multi mode
+    (single-query noisy runs keep them)."""
+    qclasses = jnp.asarray(query_classes, jnp.int32)
+    inst_class = repo.inst_class
+
+    def select(q, dets: Detections) -> jax.Array:
+        cls = inst_class[jnp.maximum(dets.inst_id, 0)]
+        return (dets.inst_id >= 0) & (cls == qclasses[q])
+
+    return select
+
+
+def filter_class(repo: Repository, dets: Detections, query_class) -> Detections:
+    """``dets`` restricted to one class — the sequential-arm equivalent of
+    ``class_select`` (same mask applied to ``valid``), so a per-class
+    detector built from a detect-all pass matches the multi-query driver's
+    ``select`` semantics exactly."""
+    keep = class_select(repo, jnp.asarray([query_class], jnp.int32))(
+        jnp.int32(0), dets
+    )
+    return dets._replace(valid=dets.valid & keep)
 
 
 def noisy_detect(
@@ -58,19 +92,22 @@ def noisy_detect(
     repo: Repository,
     frame: jax.Array,
     *,
-    query_class: int,
+    query_class: int | None,
     max_dets: int = 16,
     miss_rate: float = 0.1,
     fp_rate: float = 0.05,
     jitter: float = 0.01,
 ) -> Detections:
-    """Detector with misses, box jitter and false positives.
+    """Detector with misses, box jitter and false positives
+    (``query_class=None`` ⇒ class-agnostic, as in ``oracle_detect``).
 
     False positives get random boxes/features and inst_id = -2 so the
     benchmark can distinguish them from real results when scoring recall.
     """
     k_miss, k_jit, k_fp, k_fpbox, k_fpfeat = jax.random.split(key, 5)
-    mask = instances_visible(repo, frame) & (repo.inst_class == query_class)
+    mask = instances_visible(repo, frame)
+    if query_class is not None:
+        mask = mask & (repo.inst_class == query_class)
     miss = jax.random.bernoulli(k_miss, miss_rate, mask.shape)
     dets = _topk_slots(repo, frame, mask & ~miss, max_dets)
 

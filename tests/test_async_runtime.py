@@ -110,6 +110,55 @@ def test_async_driver_drops_duplicate_completions(world):
     assert occupied == int(driver.carry.results)
 
 
+def test_async_driver_merge_high_water_and_overflow_guard(world):
+    """Ring-wrap guard: merges surface their insertion high-water mark, and
+    a worker matcher that overflowed its ring (≥ capacity insertions since
+    the snapshot) raises instead of silently aliasing the append window."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.runtime import MatcherRingOverflow, WorkerResult
+
+    repo, chunks, det = world
+    carry = init_carry(
+        init_state(chunks.length), init_matcher(max_results=8),
+        jax.random.PRNGKey(1),
+    )
+    driver = AsyncSearchDriver(
+        carry, chunks, det, cohort_size=2, num_workers=1,
+        result_limit=10**9, max_frames=10**9,
+    )
+    driver._issue_cohort()
+    cohort = driver._work.get_nowait()
+    res = driver._process_one(0, cohort)
+    driver._merge(res)
+    assert driver.stats["merge_high_water"] == int(
+        res.matcher.total_inserted - res.snap_matcher.total_inserted
+    )
+    # fabricate an overflowed worker: total_inserted advanced past capacity
+    driver._issue_cohort()
+    cohort2 = driver._work.get_nowait()
+    res2 = driver._process_one(0, cohort2)
+    overflowed = dataclasses.replace(
+        res2.matcher,
+        total_inserted=res2.snap_matcher.total_inserted + jnp.int32(9),
+    )
+    bad = WorkerResult(
+        cohort_id=res2.cohort_id, worker_id=0,
+        delta_n1=res2.delta_n1, delta_n=res2.delta_n,
+        new_results=res2.new_results, frames=res2.frames,
+        matcher=overflowed, snap_matcher=res2.snap_matcher,
+    )
+    step_before = int(driver.carry.step)
+    import pytest as _pytest
+
+    with _pytest.raises(MatcherRingOverflow):
+        driver._merge(bad)
+    # the poisoned merge must not have been committed
+    assert int(driver.carry.step) == step_before
+
+
 def test_async_driver_single_worker_equivalent_semantics(world):
     """1-worker async == serialized batched search (same state algebra)."""
     repo, chunks, det = world

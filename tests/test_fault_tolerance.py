@@ -68,6 +68,23 @@ def test_batcher_never_blocks_on_stragglers():
     assert batch.valid.sum() == 1
 
 
+def test_batcher_padding_fraction_matches_hand_count():
+    """Regression for the ``stats["padded_slots"]`` accounting gap: the
+    padding fraction must equal the pads actually emitted, hand-counted
+    over a ragged queue (full, partial, and singleton batches)."""
+    b = RequestBatcher(batch_size=4, max_wait_rounds=0)
+    assert b.padding_fraction() == 0.0    # nothing emitted yet
+    hand_pads, hand_slots = 0, 0
+    for burst in ([5] * 4, [6] * 3, [7]):  # pads: 0, 1, 3
+        b.submit(burst, [0] * len(burst), cohort=0)
+        batch = b.next_batch()
+        hand_pads += int((~batch.valid).sum())
+        hand_slots += len(batch.valid)
+    assert b.stats["padded_slots"] == hand_pads == 4
+    assert b.padding_fraction() == hand_pads / hand_slots
+    assert abs(b.padding_fraction() + b.occupancy - 1.0) < 1e-12
+
+
 def test_elastic_plan_feasibility():
     import os
     # single-device "mesh" of shape (1,1) always divides

@@ -2,7 +2,12 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.matcher import init_matcher, match_and_update, pairwise_iou
+from repro.core.matcher import (
+    init_matcher,
+    match_and_update,
+    merge_matcher_checked,
+    pairwise_iou,
+)
 
 
 def _box(x, y, w=0.1, h=0.1):
@@ -92,3 +97,54 @@ def test_ring_buffer_wraps():
         m = r.new_state
         assert int(r.d0) == 1
     assert int((m.times_seen > 0).sum()) == 2            # capacity bound holds
+    assert int(m.total_inserted) == 4    # monotone, unlike the ring cursor
+
+
+def _insert_n(m, n, *, start=0):
+    """n distinct single-detection frames, far beyond the time gate."""
+    for i in range(start, start + n):
+        b, f, v = _dets([_box(0.05, 0.05)])
+        m = match_and_update(
+            m, b, f, v, jnp.int32(0), jnp.int32(i * 2000), jnp.int32(0)
+        ).new_state
+    return m
+
+
+def test_merge_surfaces_high_water_insertions():
+    snap = init_matcher(max_results=8)
+    src = _insert_n(snap, 3)
+    dst = _insert_n(snap, 2, start=100)
+    merged, stats = merge_matcher_checked(dst, src, snap)
+    assert int(stats.inserted) == 3
+    assert not bool(stats.overflow)
+    assert int(stats.clobbered) == 0
+    assert int(merged.total_inserted) == 5
+    assert int((merged.times_seen > 0).sum()) == 5
+
+
+def test_merge_overflow_flagged_not_silently_wrapped():
+    """Ring-wrap guard (ROADMAP, test-first): a worker inserting ≥ capacity
+    results between snapshot and merge wraps its ring — the cursor delta
+    aliases mod capacity and the old merge silently appended only
+    ``inserted % capacity`` entries.  The monotone insertion counter makes
+    the overflow observable so callers can raise/flag instead."""
+    cap = 4
+    snap = init_matcher(max_results=cap)
+    src = _insert_n(snap, cap + 2)       # 6 insertions into a 4-ring
+    merged, stats = merge_matcher_checked(init_matcher(max_results=cap), src, snap)
+    assert int(stats.inserted) == cap + 2
+    assert bool(stats.overflow)
+    # the silent-wrap symptom the flag guards against: the merge window
+    # aliased to 2 entries, 4 results are unrecoverable
+    assert int((merged.times_seen > 0).sum()) == 2
+
+
+def test_merge_clobber_counts_live_dst_overwrites():
+    cap = 4
+    snap = init_matcher(max_results=cap)
+    src = _insert_n(snap, 3)             # appended at dst.cursor == 3
+    dst = _insert_n(snap, 3, start=100)  # dst holds 3 live entries
+    _, stats = merge_matcher_checked(dst, src, snap)
+    assert not bool(stats.overflow)
+    # slots [3, 0, 1): wraps onto dst's live entries 0 and 1
+    assert int(stats.clobbered) == 2

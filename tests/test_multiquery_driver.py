@@ -1,0 +1,338 @@
+"""Multi-query batched driver ≡ per-query scanned driver (DESIGN.md §9).
+
+The acceptance bar: at Q=1 ``run_search_multi`` is bit-identical in
+(step, results, trace, sampler statistics, key) to ``run_search_scan``;
+at Q>1 with disjoint per-query keys every query's trajectory equals its
+own sequential run at the same frame budget — cross-query dedup and the
+detection cache change WHICH detector invocations happen, never the
+values a query consumes.  Property tests pin the dedup/scatter-back
+invariants: no sampled frame is ever dropped, no detection is ever
+counted into two queries' sampler deltas.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    init_carry,
+    init_carry_multi,
+    init_matcher,
+    init_state,
+    run_search_multi,
+    run_search_scan,
+    stack_carries,
+)
+from repro.core.thompson import choose_chunks, choose_chunks_batched
+from repro.serve.batcher import (
+    cache_insert,
+    cache_lookup,
+    dedup_first_index,
+    init_detection_cache,
+)
+from repro.sim import RepoSpec, generate
+from repro.sim.oracle import oracle_detect
+
+
+@pytest.fixture(scope="module")
+def world():
+    spec = RepoSpec(
+        video_lengths=[6_000] * 3, num_instances=120, chunk_frames=600,
+        locality=4.0, seed=7,
+    )
+    repo, chunks = generate(spec)
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    return repo, chunks, det
+
+
+def _fresh(chunks, key):
+    return init_carry(
+        init_state(chunks.length), init_matcher(max_results=512), key
+    )
+
+
+def _fresh_multi(chunks, keys):
+    return init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=512), keys
+    )
+
+
+def _qkey(q):
+    return jax.random.fold_in(jax.random.PRNGKey(0), q)
+
+
+# ---------------------------------------------------------------------------
+# Q=1 parity: bit-identical to run_search_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cohorts", [1, 8])
+def test_multi_q1_bit_identical_to_scan(world, cohorts):
+    _, chunks, det = world
+    scan, scan_trace = run_search_scan(
+        _fresh(chunks, jax.random.PRNGKey(0)), chunks, detector=det,
+        result_limit=15, max_steps=1200, cohorts=cohorts, trace_every=25,
+    )
+    multi, traces, stats = run_search_multi(
+        _fresh_multi(chunks, jax.random.PRNGKey(0)[None]), chunks,
+        detector=det, result_limits=15, max_steps=1200, cohorts=cohorts,
+        trace_every=25,
+    )
+    assert (int(scan.step), int(scan.results)) == (
+        int(multi.step[0]), int(multi.results[0])
+    )
+    assert scan_trace == traces[0]
+    np.testing.assert_array_equal(
+        np.asarray(scan.sampler.n), np.asarray(multi.sampler.n[0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(scan.sampler.n1), np.asarray(multi.sampler.n1[0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(scan.key), np.asarray(multi.key[0])
+    )
+    # one query, no duplicates: every sampled frame is one detector call
+    assert stats["detector_invocations"] == int(multi.step[0])
+
+
+@pytest.mark.parametrize("method", ["wilson_hilferty", "pallas"])
+def test_multi_q1_other_methods(world, method):
+    _, chunks, det = world
+    scan, _ = run_search_scan(
+        _fresh(chunks, jax.random.PRNGKey(0)), chunks, detector=det,
+        result_limit=10, max_steps=600, method=method,
+    )
+    multi, _, _ = run_search_multi(
+        _fresh_multi(chunks, jax.random.PRNGKey(0)[None]), chunks,
+        detector=det, result_limits=10, max_steps=600, method=method,
+    )
+    assert (int(scan.step), int(scan.results)) == (
+        int(multi.step[0]), int(multi.results[0])
+    )
+
+
+# ---------------------------------------------------------------------------
+# Q=4 disjoint keys: each query matches its own sequential run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cache", [0, -1])
+def test_multi_q4_each_query_matches_sequential(world, cache):
+    _, chunks, det = world
+    q_n, cohorts = 4, 4
+    limits = [12, 12, 6, 12]   # query 2 finishes early and must mask out
+    keys = jnp.stack([_qkey(q) for q in range(q_n)])
+    cache_frames = chunks.total_frames if cache else 0
+    multi, traces, stats = run_search_multi(
+        _fresh_multi(chunks, keys), chunks, detector=det,
+        result_limits=jnp.asarray(limits, jnp.int32), max_steps=900,
+        cohorts=cohorts, trace_every=25, cache_frames=cache_frames,
+    )
+    for q in range(q_n):
+        scan, scan_trace = run_search_scan(
+            _fresh(chunks, _qkey(q)), chunks, detector=det,
+            result_limit=limits[q], max_steps=900, cohorts=cohorts,
+            trace_every=25,
+        )
+        assert (int(scan.step), int(scan.results)) == (
+            int(multi.step[q]), int(multi.results[q])
+        ), f"query {q} diverged"
+        assert scan_trace == traces[q], f"query {q} trace diverged"
+        np.testing.assert_array_equal(
+            np.asarray(scan.sampler.n), np.asarray(multi.sampler.n[q])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(scan.key), np.asarray(multi.key[q])
+        )
+    # sharing can only save detector work, never add any
+    assert stats["detector_invocations"] <= stats["frames_sampled"]
+
+
+def test_stack_carries_matches_init_multi(world):
+    _, chunks, _ = world
+    keys = [_qkey(q) for q in range(3)]
+    stacked = stack_carries([_fresh(chunks, k) for k in keys])
+    built = _fresh_multi(chunks, jnp.stack(keys))
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(built)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_init_matcher_multi_layout():
+    from repro.core import init_matcher_multi
+
+    single = init_matcher(max_results=8, feat_dim=4, iou_thresh=0.3)
+    multi = init_matcher_multi(3, max_results=8, feat_dim=4, iou_thresh=0.3)
+    assert multi.iou_thresh == single.iou_thresh    # statics shared
+    for a, b in zip(jax.tree.leaves(multi), jax.tree.leaves(single)):
+        assert a.shape == (3,) + b.shape
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b))
+
+
+def test_identical_queries_dedup_exactly(world):
+    """Q identical queries (same key) sample identical frames every round,
+    so the batched pass detects each frame exactly once: invocations =
+    frames_sampled / Q, even with the cache off."""
+    _, chunks, det = world
+    q_n, cohorts = 4, 4
+    keys = jnp.stack([jax.random.PRNGKey(3)] * q_n)
+    multi, _, stats = run_search_multi(
+        _fresh_multi(chunks, keys), chunks, detector=det,
+        result_limits=12, max_steps=600, cohorts=cohorts,
+    )
+    steps = np.asarray(multi.step)
+    assert (steps == steps[0]).all()
+    assert stats["frames_sampled"] == int(steps.sum())
+    assert stats["detector_invocations"] * q_n == stats["frames_sampled"]
+
+
+# ---------------------------------------------------------------------------
+# Batched Thompson choice: per-query bit-parity with the scalar path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["exact", "wilson_hilferty", "pallas"])
+def test_choose_chunks_batched_parity(method):
+    q_n, m, cohorts = 5, 37, 6
+    rng = jax.random.PRNGKey(11)
+    n1 = jnp.abs(jax.random.normal(rng, (q_n, m))) * 3
+    n = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 1), (q_n, m))) * 9
+    frames = jnp.full((q_n, m), 100, jnp.int32)
+    # a couple of exhausted chunks per query
+    n = n.at[:, 0].set(100.0)
+    import dataclasses
+
+    state = init_state(frames[0])
+    batched_state = dataclasses.replace(state, n1=n1, n=n, frames=frames)
+    keys = jnp.stack([_qkey(q) for q in range(q_n)])
+    got = choose_chunks_batched(
+        keys, batched_state, cohorts=cohorts, method=method
+    )
+    assert got.shape == (q_n, cohorts)
+    for q in range(q_n):
+        single = dataclasses.replace(
+            state, n1=n1[q], n=n[q], frames=frames[q]
+        )
+        want = choose_chunks(keys[q], single, cohorts=cohorts, method=method)
+        np.testing.assert_array_equal(np.asarray(got[q]), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Dedup + cache properties (run under the hypothesis stub when offline)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60)
+@given(
+    frames=st.lists(st.integers(0, 9), min_size=1, max_size=32),
+    valid_bits=st.integers(0, 2**32 - 1),
+)
+def test_dedup_never_drops_never_duplicates(frames, valid_bits):
+    f = jnp.asarray(frames, jnp.int32)
+    valid = np.asarray(
+        [(valid_bits >> i) & 1 for i in range(len(frames))], bool
+    )
+    first = np.asarray(dedup_first_index(f, jnp.asarray(valid)))
+    is_rep = (first == np.arange(len(frames))) & valid
+    for i, ok in enumerate(valid):
+        if not ok:
+            continue
+        r = first[i]
+        # never drops: every valid slot gathers a valid representative
+        # holding EXACTLY the frame the query sampled
+        assert valid[r] and frames[r] == frames[i]
+        assert is_rep[r]
+        assert r <= i
+    # never double-counts: exactly one representative (one detector call)
+    # per distinct valid frame
+    assert is_rep.sum() == len({frames[i] for i in np.nonzero(valid)[0]})
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 2**16))
+def test_round_sampler_deltas_isolated_per_query(seed, _world_cache={}):
+    """No detection is ever double-counted across queries: after a short
+    multi-query run, each query's sampler has absorbed exactly its own
+    frames (Σ n-delta == its step counter) and its trajectory equals its
+    solo run — a detection leaking into another query's deltas would break
+    both."""
+    if "w" not in _world_cache:
+        spec = RepoSpec(
+            video_lengths=[2_000] * 2, num_instances=60, chunk_frames=500,
+            locality=3.0, seed=5,
+        )
+        _world_cache["w"] = generate(spec)
+    repo, chunks = _world_cache["w"]
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    q_n, cohorts = 3, 2
+    keys = jnp.stack([
+        jax.random.fold_in(jax.random.PRNGKey(seed), q) for q in range(q_n)
+    ])
+    multi, _, stats = run_search_multi(
+        _fresh_multi(chunks, keys), chunks, detector=det,
+        result_limits=8, max_steps=24, cohorts=cohorts,
+        cache_frames=chunks.total_frames,
+    )
+    n_sum = np.asarray(multi.sampler.n).sum(axis=-1)
+    steps = np.asarray(multi.step)
+    np.testing.assert_array_equal(n_sum, steps.astype(n_sum.dtype))
+    for q in range(q_n):
+        solo, _ = run_search_scan(
+            _fresh(chunks, keys[q]), chunks, detector=det,
+            result_limit=8, max_steps=24, cohorts=cohorts,
+        )
+        assert (int(solo.step), int(solo.results)) == (
+            int(multi.step[q]), int(multi.results[q])
+        )
+
+
+# ---------------------------------------------------------------------------
+# Detection cache unit semantics
+# ---------------------------------------------------------------------------
+
+
+def _det_struct():
+    return {
+        "boxes": jax.ShapeDtypeStruct((2, 4), jnp.float32),
+        "valid": jax.ShapeDtypeStruct((2,), jnp.bool_),
+    }
+
+
+def test_cache_roundtrip_and_eviction():
+    cache = init_detection_cache(_det_struct(), capacity=4)
+    frames = jnp.asarray([0, 1, 5, 2], jnp.int32)
+    dets = {
+        "boxes": jnp.arange(4 * 2 * 4, dtype=jnp.float32).reshape(4, 2, 4),
+        "valid": jnp.ones((4, 2), bool),
+    }
+    cache = cache_insert(cache, frames, dets, jnp.ones((4,), bool))
+    hit, vals = cache_lookup(cache, frames)
+    # frame 5 collides with frame 1 (slot 1); the FIRST masked write wins,
+    # so 1 survives and 5 missed
+    np.testing.assert_array_equal(np.asarray(hit), [True, True, False, True])
+    np.testing.assert_array_equal(
+        np.asarray(vals["boxes"][0]), np.asarray(dets["boxes"][0])
+    )
+    # eviction: inserting frame 5 now overwrites slot 1
+    cache = cache_insert(
+        cache,
+        jnp.asarray([5], jnp.int32),
+        jax.tree.map(lambda x: x[2:3], dets),
+        jnp.ones((1,), bool),
+    )
+    hit2, _ = cache_lookup(cache, frames)
+    np.testing.assert_array_equal(np.asarray(hit2), [True, False, True, True])
+
+
+def test_cache_masked_insert_is_noop():
+    cache = init_detection_cache(_det_struct(), capacity=4)
+    dets = {
+        "boxes": jnp.ones((1, 2, 4), jnp.float32),
+        "valid": jnp.ones((1, 2), bool),
+    }
+    cache = cache_insert(
+        cache, jnp.asarray([3], jnp.int32), dets, jnp.zeros((1,), bool)
+    )
+    hit, _ = cache_lookup(cache, jnp.asarray([3], jnp.int32))
+    assert not bool(hit[0])

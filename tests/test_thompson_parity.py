@@ -72,6 +72,34 @@ def test_interpret_kernel_matches_ref_on_tricky_states(m, bm):
     np.testing.assert_allclose(np.asarray(kval), np.asarray(rval), rtol=1e-6)
 
 
+@pytest.mark.parametrize("m,bm", [(130, 64), (300, 128)])
+def test_interpret_batched_kernel_matches_per_query_kernel(m, bm):
+    """Multi-query grid (DESIGN.md §9): one (Q·C, M-blocks) launch must be
+    bit-identical per query row to Q separate ``thompson_choose`` calls."""
+    from repro.kernels.thompson.kernel import thompson_choose_batched
+
+    q_n, cohorts = 3, 4
+    alphas, betas, zs = [], [], []
+    for q in range(q_n):
+        s = _tricky_state(m=m, seed=m + q)
+        a, b = _sentinel_params(s)
+        alphas.append(a)
+        betas.append(b)
+        zs.append(jax.random.normal(jax.random.PRNGKey(100 + q), (cohorts, m)))
+    bidx, bval = thompson_choose_batched(
+        jnp.stack(alphas), jnp.stack(betas), jnp.stack(zs),
+        block_m=bm, interpret=True,
+    )
+    for q in range(q_n):
+        sidx, sval = thompson_choose(
+            alphas[q], betas[q], zs[q], block_m=bm, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(bidx[q]), np.asarray(sidx))
+        np.testing.assert_allclose(
+            np.asarray(bval[q]), np.asarray(sval), rtol=1e-6
+        )
+
+
 def test_choose_chunks_pallas_equals_wilson_hilferty():
     """method="pallas" must be bit-identical in its chunk choices to
     method="wilson_hilferty" under the same key."""
