@@ -28,12 +28,12 @@ Q_CLASSES = (0, 0, 0, 0, 1, 1, 1, 1)   # two predicates × four users
 def main(quick: bool = False) -> None:
     from repro.configs.exsample_paper import dashcam
     from repro.core import (
+        Execution,
+        SearchPlan,
         init_carry,
         init_carry_multi,
         init_matcher,
         init_state,
-        run_search_multi,
-        run_search_scan,
     )
     from repro.sim import generate
     from repro.sim.oracle import class_select, filter_class, oracle_detect
@@ -56,22 +56,21 @@ def main(quick: bool = False) -> None:
 
     keys = [jax.random.fold_in(jax.random.PRNGKey(0), q) for q in range(q_n)]
 
-    # ---- sequential arm: Q independent run_search_scan runs ----
+    # ---- sequential arm: Q independent single-query scan plans ----
+    seq_plan = SearchPlan(
+        result_limit=limit, max_steps=budget, cohorts=cohorts,
+        method="wilson_hilferty",
+    )
     seq_steps, seq_results, seq_wall = [], [], 0.0
     for q in range(q_n):
         carry = init_carry(
             init_state(chunks.length), init_matcher(max_results=4096), keys[q]
         )
         t0 = time.perf_counter()
-        out, _ = run_search_scan(
-            carry, chunks, detector=class_det(Q_CLASSES[q]),
-            result_limit=limit, max_steps=budget, cohorts=cohorts,
-            method="wilson_hilferty",
-        )
-        jax.block_until_ready(out.results)
+        res = seq_plan.run(carry, chunks, detector=class_det(Q_CLASSES[q]))
         seq_wall += time.perf_counter() - t0
-        seq_steps.append(int(out.step))
-        seq_results.append(int(out.results))
+        seq_steps.append(res.steps[0])
+        seq_results.append(res.results[0])
 
     # ---- multi arm: one driver, one shared detector pass per round ----
     carries = init_carry_multi(
@@ -79,14 +78,19 @@ def main(quick: bool = False) -> None:
         jnp.stack(keys),
     )
     t0 = time.perf_counter()
-    multi, _, stats = run_search_multi(
-        carries, chunks, detector=det_all, select=select,
-        result_limits=limit, max_steps=budget, cohorts=cohorts,
-        method="wilson_hilferty", cache_frames=chunks.total_frames,
-    )
-    jax.block_until_ready(multi.results)
+    mres = SearchPlan(
+        queries=q_n, result_limit=limit, max_steps=budget, cohorts=cohorts,
+        method="wilson_hilferty",
+        execution=Execution(queries_axis=True, cache=-1),
+    ).run(carries, chunks, detector=det_all, select=select)
     multi_wall = time.perf_counter() - t0
-    multi_results = [int(r) for r in multi.results]
+    multi_results = list(mres.results)
+    stats = {
+        "detector_invocations": mres.stats.detector_invocations,
+        "cache_hits": mres.stats.cache_hits,
+        "rounds": mres.stats.rounds,
+        "frames_sampled": mres.stats.frames_sampled,
+    }
 
     seq_inv = sum(seq_steps)          # one detector call per sampled frame
     multi_inv = stats["detector_invocations"]

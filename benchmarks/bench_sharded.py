@@ -30,11 +30,11 @@ def _child(shards: int, steps: int, parity: bool) -> None:
     import jax
 
     from repro.core import (
+        Execution,
+        SearchPlan,
         init_carry,
         init_matcher,
         init_state,
-        run_search_scan,
-        run_search_sharded,
     )
     from repro.launch.mesh import make_data_mesh
     from repro.sim import RepoSpec, generate
@@ -56,24 +56,28 @@ def _child(shards: int, steps: int, parity: bool) -> None:
     )
     never = 10**9  # unreachable result limit: measure steady-state rate
     mesh = make_data_mesh(shards)
+    scan_plan = SearchPlan(
+        result_limit=never, max_steps=steps, cohorts=cohorts,
+        method="wilson_hilferty",
+    )
+    sharded_plan = SearchPlan(
+        result_limit=never, max_steps=steps, cohorts=cohorts,
+        execution=Execution(shards=shards, sync_every=sync_every)
+        if shards > 1 else Execution(strategy="sharded",
+                                     sync_every=sync_every),
+    )
 
     def timed(run):
         run()  # compile + warm (max_steps is static, reuse the executable)
         t0 = time.perf_counter()
-        out, _ = run()
-        jax.block_until_ready(out.results)
-        return int(out.step) / (time.perf_counter() - t0)
+        res = run()
+        return res.steps[0] / (time.perf_counter() - t0)
 
     if shards == 1:
-        rate = timed(lambda: run_search_scan(
-            fresh(), chunks, detector=det, result_limit=never,
-            max_steps=steps, cohorts=cohorts, method="wilson_hilferty",
-        ))
+        rate = timed(lambda: scan_plan.run(fresh(), chunks, detector=det))
         print(f"scanned,1,{cohorts},-,{rate:.0f}", flush=True)
-    rate = timed(lambda: run_search_sharded(
-        fresh(), chunks, mesh=mesh, detector=det, result_limit=never,
-        max_steps=steps, cohorts=cohorts, sync_every=sync_every,
-    ))
+    rate = timed(lambda: sharded_plan.run(
+        fresh(), chunks, detector=det, mesh=mesh))
     print(f"sharded,{shards},{cohorts},{sync_every},{rate:.0f}", flush=True)
 
     if parity and shards == max(DEVICE_COUNTS):
@@ -87,19 +91,19 @@ def _child(shards: int, steps: int, parity: bool) -> None:
             jax.random.PRNGKey(0),
         )
         budget = 2_048
-        scan, _ = run_search_scan(
-            fresh(), chunks, detector=det, result_limit=never,
-            max_steps=budget, cohorts=cohorts, method="wilson_hilferty",
-        )
-        sh, _ = run_search_sharded(
-            fresh(), chunks, mesh=mesh, detector=det, result_limit=never,
-            max_steps=budget, cohorts=cohorts, sync_every=sync_every,
-        )
-        ratio = int(sh.results) / max(int(scan.results), 1)
+        scan = SearchPlan(
+            result_limit=never, max_steps=budget, cohorts=cohorts,
+            method="wilson_hilferty",
+        ).run(fresh(), chunks, detector=det)
+        sh = SearchPlan(
+            result_limit=never, max_steps=budget, cohorts=cohorts,
+            execution=Execution(shards=shards, sync_every=sync_every),
+        ).run(fresh(), chunks, detector=det, mesh=mesh)
+        ratio = sh.results[0] / max(scan.results[0], 1)
         ok = "OK" if abs(ratio - 1.0) <= 0.05 else "FAIL"
         print(
-            f"parity_dashcam,{shards},scan={int(scan.results)},"
-            f"sharded={int(sh.results)},ratio={ratio:.3f},{ok}",
+            f"parity_dashcam,{shards},scan={scan.results[0]},"
+            f"sharded={sh.results[0]},ratio={ratio:.3f},{ok}",
             flush=True,
         )
         assert ok == "OK", f"8-way parity off by {ratio:.3f}x"

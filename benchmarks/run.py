@@ -1,22 +1,62 @@
 """Benchmark harness entry: one section per paper table/figure.
 
-  bench_bias       -- paper 3.3.2 / Fig. 2 (estimator + Poisson validation)
-  bench_savings    -- paper Figs. 3-4 (frames-processed savings vs random+)
-  bench_batched    -- paper 3.7.1 (cohort batching) + straggler model
-  bench_sharded    -- sharded driver steps/sec at 1/2/4/8 shards + parity
-  bench_multiquery -- Q=8 shared detector pass vs sequential (DESIGN.md §9)
-  bench_overhead   -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
-  bench_kernels    -- kernel reference microbenchmarks (CSV)
-  bench_roofline   -- Roofline table from dry-run artifacts
+  bench_bias         -- paper 3.3.2 / Fig. 2 (estimator + Poisson validation)
+  bench_savings      -- paper Figs. 3-4 (frames-processed savings vs random+)
+  bench_batched      -- paper 3.7.1 (cohort batching) + straggler model
+  bench_sharded      -- sharded driver steps/sec at 1/2/4/8 shards + parity
+  bench_multiquery   -- Q=8 shared detector pass vs sequential (DESIGN.md §9)
+  bench_plan_compose -- Q=8 × 8-shard composed lowering vs sequential-sharded
+                        and single-device multi (DESIGN.md §10)
+  bench_overhead     -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
+  bench_kernels      -- kernel reference microbenchmarks (CSV)
+  bench_roofline     -- Roofline table from dry-run artifacts
+
+Each section *declares* the ``Execution`` capabilities it exercises
+(DESIGN.md §10); sections that need an in-process mesh the host cannot
+provide are SKIPPED with a logged reason — never silently — while
+subprocess-based sections (``forces_devices``) re-exec children with
+forced host devices and run anywhere.
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
 import time
+from typing import Callable, Optional
+
+from repro.core.plan import Execution
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """A registered benchmark section and its execution requirements."""
+
+    name: str
+    run: Callable[[bool], None]        # run(quick)
+    execution: Optional[Execution] = None  # capabilities it exercises
+    forces_devices: bool = False       # spawns children with forced devices
+
+
+def should_skip(spec: BenchSpec, available_devices: int) -> str | None:
+    """Reason this section cannot run on this host, or None to run it.
+
+    A section declaring a mesh (``execution.shards > 1``) needs that many
+    in-process devices unless it forces its own (subprocess re-exec with
+    ``--xla_force_host_platform_device_count``).
+    """
+    if spec.execution is None or spec.forces_devices:
+        return None
+    if spec.execution.shards > available_devices:
+        return (
+            f"needs a {spec.execution.shards}-way "
+            f"'{spec.execution.axis}' mesh but the host exposes "
+            f"{available_devices} device(s); set "
+            "--xla_force_host_platform_device_count or run on more devices"
+        )
+    return None
+
+
+def _sections() -> list[BenchSpec]:
     from benchmarks import (
         bench_batched,
         bench_bias,
@@ -24,27 +64,51 @@ def main() -> None:
         bench_kernels,
         bench_multiquery,
         bench_overhead,
+        bench_plan_compose,
         bench_roofline,
         bench_savings,
         bench_sharded,
     )
 
-    sections = [
-        ("bias_validation(fig2)", lambda: bench_bias.main()),
-        ("savings(fig3-4)", lambda: bench_savings.main(quick=quick)),
-        ("chunking(sec3.5)", bench_chunking.main),
-        ("batched(sec3.7.1)", bench_batched.main),
-        ("sharded(sec3.7.1)", lambda: bench_sharded.main(quick=quick)),
-        ("multiquery(sec9)", lambda: bench_multiquery.main(quick=quick)),
-        ("overhead(fig6)", bench_overhead.main),
-        ("kernels", bench_kernels.main),
-        ("roofline", bench_roofline.main),
+    return [
+        BenchSpec("bias_validation(fig2)", lambda quick: bench_bias.main()),
+        BenchSpec("savings(fig3-4)",
+                  lambda quick: bench_savings.main(quick=quick)),
+        BenchSpec("chunking(sec3.5)", lambda quick: bench_chunking.main()),
+        BenchSpec("batched(sec3.7.1)", lambda quick: bench_batched.main()),
+        BenchSpec("sharded(sec3.7.1)",
+                  lambda quick: bench_sharded.main(quick=quick),
+                  execution=Execution(shards=8), forces_devices=True),
+        BenchSpec("multiquery(sec9)",
+                  lambda quick: bench_multiquery.main(quick=quick),
+                  execution=Execution(queries_axis=True, cache=-1)),
+        BenchSpec("plan_compose(sec10)",
+                  lambda quick: bench_plan_compose.main(quick=quick),
+                  execution=Execution(queries_axis=True, shards=8, cache=-1),
+                  forces_devices=True),
+        BenchSpec("overhead(fig6)", lambda quick: bench_overhead.main()),
+        BenchSpec("kernels", lambda quick: bench_kernels.main()),
+        BenchSpec("roofline", lambda quick: bench_roofline.main()),
     ]
-    for name, fn in sections:
-        print(f"\n===== {name} =====", flush=True)
+
+
+SECTIONS = _sections()
+
+
+def main() -> None:
+    import jax
+
+    quick = "--quick" in sys.argv
+    available = len(jax.devices())
+    for spec in SECTIONS:
+        reason = should_skip(spec, available)
+        if reason is not None:
+            print(f"\n===== {spec.name} ===== SKIPPED: {reason}", flush=True)
+            continue
+        print(f"\n===== {spec.name} =====", flush=True)
         t0 = time.time()
-        fn()
-        print(f"[{name} done in {time.time() - t0:.1f}s]", flush=True)
+        spec.run(quick)
+        print(f"[{spec.name} done in {time.time() - t0:.1f}s]", flush=True)
 
 
 if __name__ == "__main__":

@@ -5,12 +5,18 @@ generate a 10-video repository with localized instances, then answer
 "find 40 distinct class-0 objects" with ExSample and with random+, and
 compare frames processed (the paper's cost metric).
 
+This is the canonical ``SearchPlan`` snippet (DESIGN.md §10): declare
+WHAT to search on the plan, let ``run()`` lower it to the right
+device-resident driver, and read the structured ``SearchResult`` —
+swapping in a mesh, more queries, a detection cache or async workers is
+an ``Execution(...)`` change, not a different API.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
 from repro.configs.exsample_paper import dashcam
-from repro.core import init_carry, init_matcher, init_state, run_search_scan
+from repro.core import SearchPlan, init_carry, init_matcher, init_state
 from repro.core.baselines import FrameSchedule, run_schedule
 from repro.sim import generate
 from repro.sim.oracle import oracle_detect
@@ -24,31 +30,36 @@ def main():
           f"{chunks.num_chunks} chunks, {repo.num_instances} instances")
 
     detector = lambda key, frame: oracle_detect(repo, frame, query_class=0)
-    limit = 40
 
     fresh = lambda: init_carry(
         init_state(chunks.length), init_matcher(max_results=1024),
         jax.random.PRNGKey(0),
     )
 
-    # device-resident driver (DESIGN.md §7): whole search is one device
-    # call; the recall trace comes back in a single host sync at the end
-    ex, trace = run_search_scan(
-        fresh(), chunks, detector=detector, result_limit=limit,
-        max_steps=20_000, cohorts=8, trace_every=200,
+    # ONE declarative plan; the default lowering is the device-resident
+    # scanned driver (DESIGN.md §7) — the whole search is one device call
+    # and the recall trace comes back in a single host sync at the end.
+    # Scaling up is an Execution(...) tweak on the same plan, e.g.
+    #   execution=Execution(shards=8, cache=-1, queries_axis=True)
+    plan = SearchPlan(
+        result_limit=40, max_steps=20_000, cohorts=8, trace_every=200,
     )
+    res = plan.run(fresh(), chunks, detector=detector)
+
     rp, _ = run_schedule(
         fresh(), chunks,
         FrameSchedule.randomplus(chunks.total_frames, 20_000),
-        detector=detector, result_limit=limit,
+        detector=detector, result_limit=40,
     )
     rates = CostRates()
-    print(f"\nExSample : {int(ex.results)} results in {int(ex.step):,} frames "
-          f"(~{sampling_cost(int(ex.step), rates).total_s:.0f} gpu·s)")
+    ex_steps = res.stats.frames_sampled
+    print(f"\nExSample : {res.results[0]} results in {ex_steps:,} frames "
+          f"(~{sampling_cost(ex_steps, rates).total_s:.0f} gpu·s, "
+          f"lowering={res.kind})")
     print(f"random+  : {int(rp.results)} results in {int(rp.step):,} frames "
           f"(~{sampling_cost(int(rp.step), rates).total_s:.0f} gpu·s)")
-    print(f"savings  : {int(rp.step) / max(int(ex.step), 1):.2f}x fewer frames")
-    print("\nrecall trace (frames, results):", trace[:8], "...")
+    print(f"savings  : {int(rp.step) / max(ex_steps, 1):.2f}x fewer frames")
+    print("\nrecall trace (frames, results):", res.trace[:8], "...")
 
 
 if __name__ == "__main__":

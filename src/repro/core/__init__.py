@@ -40,6 +40,20 @@ from repro.core.exsample import (
     run_search_sharded,
     run_search_multi,
 )
+from repro.core.plan import (
+    Execution,
+    PlanCompatibilityError,
+    PlanError,
+    PlanValueError,
+    SearchPlan,
+)
+from repro.core.executor import (
+    LoweredPlan,
+    SearchResult,
+    SearchStats,
+    lower,
+    run_search_multi_sharded,
+)
 
 __all__ = [
     "SamplerState", "init_state", "apply_update", "apply_cross_chunk_decrement",
@@ -51,4 +65,7 @@ __all__ = [
     "ExSampleCarry", "init_carry", "init_carry_multi", "stack_carries",
     "exsample_step", "exsample_batch_step",
     "run_search", "run_search_scan", "run_search_sharded", "run_search_multi",
+    "SearchPlan", "Execution", "PlanError", "PlanValueError",
+    "PlanCompatibilityError", "LoweredPlan", "SearchResult", "SearchStats",
+    "lower", "run_search_multi_sharded",
 ]

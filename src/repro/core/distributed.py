@@ -71,14 +71,19 @@ def shard_sampler_state(state: SamplerState, mesh: Mesh, axis: str = "data"):
 
 def pad_chunks(state: SamplerState, multiple: int) -> SamplerState:
     """Pad chunk arrays to a multiple of the shard count with exhausted
-    dummy chunks (frames=0 ⇒ never selected)."""
-    m = state.num_chunks
+    dummy chunks (frames=0 ⇒ never selected).  Pads the LAST axis, so the
+    same helper serves the solo sharded driver ([M] stats) and the
+    composed multi-query driver ([Q, M] stats) — one fill-value contract
+    for both (the composed bit-parity tests pin it)."""
+    m = state.n1.shape[-1]
     pad = (-m) % multiple
     if pad == 0:
         return state
     import dataclasses as _dc
 
-    f = lambda x, fill: jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    f = lambda x, fill: jnp.concatenate(
+        [x, jnp.full(x.shape[:-1] + (pad,), fill, x.dtype)], axis=-1
+    )
     return _dc.replace(
         state,
         n1=f(state.n1, 0),
@@ -129,6 +134,54 @@ def local_cohort_winners(
     all_n = jax.lax.all_gather(local_n, axis)
     win = jnp.argmax(all_scores, axis=0)                        # [C]
     pick = lambda a: jnp.take_along_axis(a, win[None, :], axis=0)[0]
+    return (
+        pick(all_idx).astype(jnp.int32),
+        pick(all_scores),
+        pick(all_n),
+    )
+
+
+def local_cohort_winners_batched(
+    keys: jax.Array,         # key[Q] — one PRNG key per query
+    alpha_l: jax.Array,      # f32[Q, local_m] — this shard's slice, per query
+    beta_l: jax.Array,       # f32[Q, local_m]
+    exhausted_l: jax.Array,  # bool[Q, local_m]
+    n_l: jax.Array,          # f32[Q, local_m]
+    *,
+    axis: str,
+    cohorts: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Leading-[Q] ``local_cohort_winners`` for the composed multi-query ×
+    sharded driver (DESIGN.md §10): Q queries' globally-consistent Thompson
+    choices in ONE pass of collectives — the all-gathers carry [S, Q, C]
+    instead of vmapping a collective per query.
+
+    Contract: row q is bit-identical to ``local_cohort_winners(keys[q],
+    alpha_l[q], …)`` — same per-query fold_in(key, shard_id) decorrelation,
+    same WH draw shapes, same replicated global argmax — which is what
+    makes the composed driver's per-query parity with
+    the solo sharded driver testable.  Returns replicated
+    (i32[Q, cohorts], f32[Q, cohorts] scores, f32[Q, cohorts] rank bases).
+    """
+    local_m = alpha_l.shape[-1]
+    shard_id = jax.lax.axis_index(axis)
+    k = jax.vmap(lambda kk: jax.random.fold_in(kk, shard_id))(keys)
+    z = jax.vmap(
+        lambda kk: jax.random.normal(kk, (cohorts, local_m), alpha_l.dtype)
+    )(k)                                                        # [Q, C, lm]
+    scores = wilson_hilferty(alpha_l[:, None, :], z) / beta_l[:, None, :]
+    scores = jnp.where(exhausted_l[:, None, :], -jnp.inf, scores)
+    local_best = jnp.argmax(scores, axis=-1)                    # [Q, C]
+    local_score = jnp.take_along_axis(
+        scores, local_best[..., None], axis=-1
+    )[..., 0]                                                   # [Q, C]
+    global_idx = shard_id * local_m + local_best
+    local_n = jnp.take_along_axis(n_l, local_best, axis=-1)
+    all_scores = jax.lax.all_gather(local_score, axis)          # [S, Q, C]
+    all_idx = jax.lax.all_gather(global_idx, axis)
+    all_n = jax.lax.all_gather(local_n, axis)
+    win = jnp.argmax(all_scores, axis=0)                        # [Q, C]
+    pick = lambda a: jnp.take_along_axis(a, win[None], axis=0)[0]
     return (
         pick(all_idx).astype(jnp.int32),
         pick(all_scores),

@@ -1,0 +1,729 @@
+"""SearchPlan lowering + execution (DESIGN.md §10).
+
+``lower(plan)`` resolves a declarative :class:`~repro.core.plan.SearchPlan`
+to ONE driver (host | scan | async | sharded | multi | multi_sharded) and
+``LoweredPlan.run`` executes it, returning a structured
+:class:`SearchResult` — per-query step/results/trace plus uniform
+:class:`SearchStats` (detector invocations, cache hit rate, matcher merge
+high-water / overflow, async scheduling counters) instead of the raw carry
+tuples and ad-hoc stats dicts the legacy ``run_search_*`` entry points
+returned.
+
+The module also owns the one lowering the legacy API could not express:
+``run_search_multi_sharded`` — the §9 leading-[Q] multi-query carry lifted
+into the §8 ``shard_map`` loop, so Q queries AND M-sharded Thompson
+statistics share one deduplicated (and per-shard cached) detector pass per
+round across the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import thompson
+from repro.core.chunks import ChunkIndex, randomplus_frame
+from repro.core.exsample import (
+    DetectorFn,
+    ExSampleCarry,
+    SelectFn,
+    _host_search,
+    _multi_search,
+    _scan_search,
+    _sharded_search,
+)
+from repro.core.matcher import MatcherState, match_and_update, merge_matcher
+from repro.core.plan import PlanError, SearchPlan
+from repro.core.state import SamplerState
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchStats:
+    """Uniform per-run accounting, populated by every lowering (fields a
+    lowering cannot observe stay at their zero defaults):
+
+    * ``detector_invocations`` / ``cache_hits`` — detector economics: the
+      Q-axis lowerings count unique, uncached frames actually detected;
+      single-query lowerings pay one invocation per sampled frame.
+    * ``rounds`` — synchronized choose→detect rounds (Q-axis lowerings).
+    * ``frames_sampled`` — Σ per-query steps (what sequential runs pay).
+    * ``merge_high_water`` / ``merge_overflow`` — matcher ring pressure
+      from ``merge_matcher_checked`` semantics: the largest number of
+      insertions folded in a single merge window, and whether any window
+      reached ring capacity (sharded + composed syncs, async merges).
+    * ``merges`` / ``reissues`` / ``duplicate_drops`` — async scheduler
+      counters (DESIGN.md §5).
+    * ``matcher_inserted`` / ``matcher_capacity`` — final ring totals.
+    """
+
+    detector_invocations: int = 0
+    cache_hits: int = 0
+    rounds: int = 0
+    frames_sampled: int = 0
+    merge_high_water: int = 0
+    merge_overflow: bool = False
+    merges: int = 0
+    reissues: int = 0
+    duplicate_drops: int = 0
+    matcher_inserted: int = 0
+    matcher_capacity: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Hits over cache lookups (hits + fresh detector invocations)."""
+        total = self.cache_hits + self.detector_invocations
+        return self.cache_hits / total if total else 0.0
+
+    @property
+    def amortization(self) -> float:
+        """Frames sampled per detector invocation — the Q-axis sharing win."""
+        return self.frames_sampled / max(self.detector_invocations, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Structured outcome of ``SearchPlan.run``: the final carry plus
+    per-query counters/traces and uniform :class:`SearchStats`."""
+
+    carry: ExSampleCarry
+    steps: tuple
+    results: tuple
+    traces: list
+    stats: SearchStats
+    plan: SearchPlan
+    kind: str
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.steps)
+
+    @property
+    def trace(self):
+        """Single-query convenience view of ``traces``."""
+        return self.traces[0]
+
+
+def lower(plan: SearchPlan) -> "LoweredPlan":
+    """Validate ``plan`` and bind it to one driver (DESIGN.md §10)."""
+    kind, method = plan.resolve()
+    return LoweredPlan(plan=plan, kind=kind, method=method)
+
+
+def _matcher_totals(carry: ExSampleCarry) -> dict:
+    return dict(
+        matcher_inserted=int(np.asarray(carry.matcher.total_inserted).sum()),
+        matcher_capacity=int(carry.matcher.times_seen.shape[-1]),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredPlan:
+    """A validated plan bound to one lowering ``kind``; ``run()`` executes
+    the compiled driver and packages the :class:`SearchResult`."""
+
+    plan: SearchPlan
+    kind: str
+    method: str
+
+    def run(
+        self,
+        carry: ExSampleCarry,
+        chunks: ChunkIndex,
+        *,
+        detector: DetectorFn,
+        select: SelectFn | None = None,
+        mesh=None,
+    ) -> SearchResult:
+        p, ex = self.plan, self.plan.execution
+        multi = self.kind in ("multi", "multi_sharded")
+        ndim = jnp.ndim(carry.step)
+        if multi and ndim != 1:
+            raise PlanError(
+                f"the {self.kind!r} lowering needs a leading-[Q] carry "
+                "(init_carry_multi / stack_carries); got a single-query "
+                "carry", field="queries")
+        if multi and int(carry.step.shape[0]) != p.queries:
+            raise PlanError(
+                f"carry has {int(carry.step.shape[0])} queries but the plan "
+                f"declares queries={p.queries}", field="queries")
+        if not multi and ndim != 0:
+            raise PlanError(
+                f"the {self.kind!r} lowering is single-query but the carry "
+                "has a leading axis; set queries/queries_axis on the plan",
+                field="queries")
+        if select is not None and not multi:
+            raise PlanError(
+                "select predicates ride on the shared Q-axis detector pass; "
+                "this plan lowers to the single-query "
+                f"{self.kind!r} driver", field="queries")
+        cache = ex.cache
+        if cache == -1:
+            cache = chunks.total_frames
+        if isinstance(p.result_limit, tuple):
+            limits = p.result_limit
+        else:
+            limits = (p.result_limit,) * p.queries
+        limit0 = int(limits[0])
+
+        if self.kind in ("host", "scan"):
+            fn = _host_search if self.kind == "host" else _scan_search
+            out, trace = fn(
+                carry, chunks, detector=detector, result_limit=limit0,
+                max_steps=p.max_steps, cohorts=p.cohorts, method=self.method,
+                trace_every=p.trace_every,
+            )
+            step = int(out.step)
+            stats = SearchStats(
+                detector_invocations=step, frames_sampled=step,
+                **_matcher_totals(out),
+            )
+            return self._package(out, [trace], stats)
+
+        if self.kind == "async":
+            from repro.core.runtime import AsyncSearchDriver
+
+            driver = AsyncSearchDriver(
+                carry, chunks, detector, cohort_size=p.cohorts,
+                num_workers=ex.async_workers, result_limit=limit0,
+                max_frames=p.max_steps,
+            )
+            out = driver.run()
+            step = int(out.step)
+            stats = SearchStats(
+                detector_invocations=step, frames_sampled=step,
+                merge_high_water=int(driver.stats["merge_high_water"]),
+                merges=int(driver.stats["merges"]),
+                reissues=int(driver.stats["reissues"]),
+                duplicate_drops=int(driver.stats["duplicate_drops"]),
+                **_matcher_totals(out),
+            )
+            return self._package(out, [[(step, int(out.results))]], stats)
+
+        if mesh is None:
+            if ex.axis != "data":
+                raise PlanError(
+                    f"axis={ex.axis!r}: only a 'data' mesh can be built "
+                    "automatically — pass mesh= with the named axis",
+                    field="axis")
+            from repro.launch.mesh import make_data_mesh
+
+            mesh = make_data_mesh(ex.shards)
+        else:
+            shape = dict(mesh.shape)
+            if shape.get(ex.axis) != ex.shards:
+                raise PlanError(
+                    f"mesh axes {shape} do not provide the plan's "
+                    f"{ex.shards} {ex.axis!r} shards — the validated "
+                    "cohorts/shards geometry must match what executes",
+                    field="shards")
+
+        if self.kind == "sharded":
+            out, trace, sh = _sharded_search(
+                carry, chunks, mesh=mesh, detector=detector,
+                result_limit=limit0, max_steps=p.max_steps,
+                cohorts=p.cohorts, sync_every=ex.sync_every, axis=ex.axis,
+            )
+            step = int(out.step)
+            stats = SearchStats(
+                detector_invocations=step, frames_sampled=step,
+                merge_high_water=sh["merge_high_water"],
+                merge_overflow=sh["merge_overflow"],
+                merges=sh["merges"],
+                **_matcher_totals(out),
+            )
+            return self._package(out, [trace], stats)
+
+        limits_arr = jnp.asarray([int(v) for v in limits], jnp.int32)
+        if self.kind == "multi":
+            out, traces, ms = _multi_search(
+                carry, chunks, detector=detector, result_limits=limits_arr,
+                max_steps=p.max_steps, cohorts=p.cohorts, method=self.method,
+                trace_every=p.trace_every, select=select,
+                cache_frames=cache or 0,
+            )
+        else:  # multi_sharded — the composed lowering
+            out, traces, ms = run_search_multi_sharded(
+                carry, chunks, mesh=mesh, detector=detector, select=select,
+                result_limits=limits_arr, max_steps=p.max_steps,
+                cohorts=p.cohorts, sync_every=ex.sync_every, axis=ex.axis,
+                cache_frames=cache or 0,
+            )
+        stats = SearchStats(
+            detector_invocations=ms["detector_invocations"],
+            cache_hits=ms["cache_hits"],
+            rounds=ms["rounds"],
+            frames_sampled=ms["frames_sampled"],
+            merge_high_water=ms.get("merge_high_water", 0),
+            merge_overflow=ms.get("merge_overflow", False),
+            merges=ms.get("merges", 0),
+            **_matcher_totals(out),
+        )
+        return self._package(out, traces, stats)
+
+    def _package(self, out, traces, stats) -> SearchResult:
+        steps = tuple(int(s) for s in np.atleast_1d(np.asarray(out.step)))
+        results = tuple(
+            int(r) for r in np.atleast_1d(np.asarray(out.results))
+        )
+        return SearchResult(
+            carry=out, steps=steps, results=results, traces=traces,
+            stats=stats, plan=self.plan, kind=self.kind,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Composed lowering: Q-query carry × M-sharded statistics (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "axis", "detector", "select", "cohorts", "sync_every",
+        "max_steps", "alpha0", "beta0",
+    ),
+)
+def _search_multi_sharded_device(
+    keys: jax.Array,         # key[Q]
+    step0: jax.Array,        # i32[Q]
+    results0: jax.Array,     # i32[Q]
+    n1: jax.Array,           # f32[Q, M] — sharded over the last axis
+    n: jax.Array,            # f32[Q, M] — sharded
+    frames: jax.Array,       # i32[Q, M] — sharded
+    matcher: MatcherState,   # leaves [Q, ...] — replicated
+    chunks: ChunkIndex,      # replicated
+    result_limits: jax.Array,  # i32[Q]
+    cache,                   # DetectionCache or None — replicated, per-shard
+    *,
+    mesh,
+    axis: str,
+    detector: DetectorFn,
+    select: SelectFn | None,
+    cohorts: int,
+    sync_every: int,
+    max_steps: int,
+    alpha0: float,
+    beta0: float,
+):
+    """Mesh-resident multi-query loop: the §9 Q-axis round (per-query
+    Thompson choice, cross-query dedup + detection cache, per-query
+    scatter-back) composed with the §8 merge schedule (full-width per-query
+    delta buffers, one psum per sync, per-query matcher folds with the
+    exact k−1 duplicate-d₁ add-back).
+
+    Layout: every statistic of the §9 carry gains the §8 sharding — chunk
+    stats ``[Q, M]`` sharded over ``axis``, per-(query, shard) matcher
+    replicas of a shared ``[Q]`` snapshot, one full-width ``[Q, M]`` delta
+    buffer per shard.  Per round the replicated
+    ``local_cohort_winners_batched`` choice hands shard s cohorts
+    ``[s·C/S, (s+1)·C/S)`` of EVERY query, whose Q·C/S frames dedup — and
+    miss-check a shard-local :class:`DetectionCache` — into one detector
+    batch.  Per-query liveness is evaluated at sync boundaries (the §8
+    overshoot caveat, per query); a finished query freezes exactly like the
+    §9 masking contract (key/step/sampler gated, slots leave the dedup).
+
+    Parity contract (tests/test_plan_parity.py): with a deterministic
+    detector, query q's trajectory — (step, results), trace, sampler
+    statistics, final key — is bit-identical to its own solo
+    ``run_search_sharded`` run on the same mesh with the same key, at ANY
+    Q: cross-query dedup and caching change WHICH detector invocations
+    happen, never the values a query consumes.
+    """
+    from repro.core.distributed import (
+        get_shard_map,
+        local_cohort_winners_batched,
+    )
+    from repro.serve.batcher import (
+        cache_insert,
+        cache_lookup,
+        dedup_first_index,
+    )
+    from jax.sharding import PartitionSpec as P
+
+    q_n = step0.shape[0]
+    num_shards = mesh.shape[axis]
+    m = n1.shape[-1]
+    local_m = m // num_shards
+    per_shard = cohorts // num_shards
+    b = q_n * per_shard
+    per_sync = cohorts * sync_every
+    cap = min(max_steps // max(per_sync, 1) + 3, 4096)
+    cap_r = matcher.times_seen.shape[-1]
+
+    def shard_fn(keys, step0, results0, n1_l, n_l, frames_l, matcher0,
+                 chks, rlimits, cache0):
+        shard_id = jax.lax.axis_index(axis)
+        fdt = n_l.dtype
+        qi = jnp.arange(q_n, dtype=jnp.int32)
+        my_slice = lambda full: jax.lax.dynamic_slice(
+            full, (0, shard_id * local_m), (q_n, local_m)
+        )
+
+        def live_mask(step, results, n_loc):
+            exh_l = jnp.all(
+                n_loc >= frames_l.astype(fdt), axis=-1
+            ).astype(jnp.int32)                                  # [Q]
+            exhausted = jax.lax.psum(exh_l, axis) == num_shards
+            return (results < rlimits) & (step < max_steps) & ~exhausted
+
+        def one_round(base_n1, base_n, active, rstate):
+            keys, delta_n1, delta_n, foreign, matcher, cache, lstep, lres, \
+                lcalls, lhits = rstate
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+            key_next, k_choice, k_det = ks[:, 0], ks[:, 1], ks[:, 2]
+            # per-query view: authoritative slice + own pending deltas (the
+            # §8 staleness model, replicated per query)
+            view = SamplerState(
+                n1=base_n1 + my_slice(delta_n1),
+                n=base_n + my_slice(delta_n),
+                frames=frames_l,
+                alpha0=alpha0,
+                beta0=beta0,
+            )
+            a_l, b_l = thompson.gamma_params(view)
+            c_ids, c_scores, c_n = local_cohort_winners_batched(
+                k_choice, a_l, b_l, view.exhausted(), view.n,
+                axis=axis, cohorts=cohorts,
+            )                                                    # [Q, C]
+            # §8 within-window random+ rank dedup, per query: occurrence
+            # index within the round plus replicated foreign-pick counts
+            live_c = jnp.isfinite(c_scores) & active[:, None]    # [Q, C]
+            owner = c_ids // local_m                             # [Q, C]
+            pshard = jnp.arange(cohorts, dtype=jnp.int32) // per_shard
+            same_before = jnp.tril(
+                c_ids[:, :, None] == c_ids[:, None, :], -1
+            )                                                    # [Q, C, C]
+            occ = jnp.sum(same_before & live_c[:, None, :], axis=-1)
+            fgather = jnp.take_along_axis(foreign, c_ids, axis=-1)
+            ranks = (
+                c_n + fgather.astype(fdt) + occ.astype(fdt)
+            ).astype(jnp.int32)                                  # [Q, C]
+            foreign = foreign.at[qi[:, None], c_ids].add(
+                ((pshard[None, :] != owner) & live_c).astype(jnp.int32)
+            )
+
+            # ---- this shard's slots: cohorts [s·C/S, (s+1)·C/S) of every
+            # query, deduped + cache-checked into ONE detector batch ----
+            g0 = shard_id * per_shard
+            slc = lambda a: jax.lax.dynamic_slice(
+                a, (0, g0), (q_n, per_shard)
+            )
+            cids_s, ranks_s, live_s = slc(c_ids), slc(ranks), slc(live_c)
+            fids_s = randomplus_frame(chks, cids_s, ranks_s)     # [Q, C/S]
+            gidx = g0 + jnp.arange(per_shard, dtype=jnp.int32)
+            det_keys = jax.vmap(
+                lambda kq: jax.vmap(
+                    lambda g: jax.random.fold_in(kq, g)
+                )(gidx)
+            )(k_det)                                             # [Q, C/S]
+            flat_frames = fids_s.reshape(b)
+            flat_live = live_s.reshape(b)
+            det_keys_flat = det_keys.reshape((b,) + det_keys.shape[2:])
+            first_idx = dedup_first_index(flat_frames, flat_live)
+            is_rep = (first_idx == jnp.arange(b, dtype=jnp.int32)) & flat_live
+            fresh = jax.vmap(detector)(det_keys_flat, flat_frames)
+            if cache is not None:
+                hit, cached = cache_lookup(cache, flat_frames)
+                expand = lambda mk, x: mk.reshape(
+                    mk.shape + (1,) * (x.ndim - 1)
+                )
+                resolved = jax.tree.map(
+                    lambda cv, fv: jnp.where(expand(hit, fv), cv, fv),
+                    cached, fresh,
+                )
+                need = is_rep & ~hit
+                # Cross-shard cache replication: insert EVERY shard's fresh
+                # detections locally.  The S caches start identical and the
+                # gathered insertion batch is replicated, so they stay
+                # replicas — a frame detected on any shard this round hits
+                # on every shard from the next round on.  Without this, a
+                # query's pick of one chunk lands on a different shard each
+                # round (cohort round-robin) and cross-round reuse — the
+                # §9 economics — almost never hits.  Collective volume is
+                # one [S·Q·C/S]-slot detection gather per round, trivial
+                # next to the detector pass it saves.
+                g_frames = jax.lax.all_gather(flat_frames, axis).reshape(-1)
+                g_need = jax.lax.all_gather(need, axis).reshape(-1)
+                g_fresh = jax.tree.map(
+                    lambda x: jax.lax.all_gather(x, axis).reshape(
+                        (-1,) + x.shape[1:]
+                    ),
+                    fresh,
+                )
+                cache = cache_insert(cache, g_frames, g_fresh, g_need)
+            else:
+                hit = jnp.zeros((b,), bool)
+                resolved = fresh
+                need = is_rep
+            dets_flat = jax.tree.map(lambda x: x[first_idx], resolved)
+            lcalls = lcalls + jnp.sum(need).astype(jnp.int32)
+            lhits = lhits + jnp.sum(is_rep & hit).astype(jnp.int32)
+            dets_q = jax.tree.map(
+                lambda x: x.reshape((q_n, per_shard) + x.shape[1:]),
+                dets_flat,
+            )
+
+            # ---- per-query sequential fold over its own slots (vmapped
+            # over Q; mirrors the §8 proc loop per query) ----
+            def fold_query(q, dn1_q, dn_q, matcher_q, dets_c, cids_q,
+                           fids_q, live_q, lstep_q, lres_q):
+                def bodyj(j, st):
+                    dn1_q, dn_q, matcher_q, lstep_q, lres_q = st
+                    d = jax.tree.map(lambda x: x[j], dets_c)
+                    live = live_q[j]
+                    valid = d.valid & live
+                    if select is not None:
+                        valid = valid & select(q, d)
+                    mres = match_and_update(
+                        matcher_q, d.boxes, d.feats, valid,
+                        chks.video_id[cids_q[j]], fids_q[j], cids_q[j],
+                    )
+                    d1_local = mres.d1 - mres.cross_chunk
+                    upd = live.astype(dn1_q.dtype)
+                    dn1_q = dn1_q.at[cids_q[j]].add(
+                        (mres.d0 - d1_local).astype(dn1_q.dtype) * upd
+                    )
+                    dn_q = dn_q.at[cids_q[j]].add(upd)
+                    valid_home = mres.cross_home >= 0
+                    dn1_q = dn1_q.at[
+                        jnp.where(valid_home, mres.cross_home, 0)
+                    ].add(-valid_home.astype(dn1_q.dtype))
+                    return (
+                        dn1_q, dn_q, mres.new_state,
+                        lstep_q + live.astype(jnp.int32),
+                        lres_q + mres.d0,
+                    )
+
+                return jax.lax.fori_loop(
+                    0, per_shard, bodyj,
+                    (dn1_q, dn_q, matcher_q, lstep_q, lres_q),
+                )
+
+            delta_n1, delta_n, matcher, lstep, lres = jax.vmap(fold_query)(
+                qi, delta_n1, delta_n, matcher, dets_q, cids_s, fids_s,
+                live_s, lstep, lres,
+            )
+            keys = jnp.where(
+                active.reshape((q_n,) + (1,) * (keys.ndim - 1)),
+                key_next, keys,
+            )
+            return (keys, delta_n1, delta_n, foreign, matcher, cache,
+                    lstep, lres, lcalls, lhits)
+
+        def body(st):
+            (keys, n1_l, n_l, matcher, snap, cache, step, results, buf, tn,
+             wcalls, whits, hw, ov, windows, _cont) = st
+            active = live_mask(step, results, n_l)               # [Q]
+            rst = (
+                keys,
+                jnp.zeros((q_n, m), n1_l.dtype),
+                jnp.zeros((q_n, m), fdt),
+                jnp.zeros((q_n, m), jnp.int32),
+                matcher,
+                cache,
+                jnp.zeros((q_n,), jnp.int32),
+                jnp.zeros((q_n,), jnp.int32),
+                wcalls,
+                whits,
+            )
+            keys, dn1, dn, _foreign, matcher, cache, lstep, lres, wcalls, \
+                whits = jax.lax.fori_loop(
+                    0, sync_every, lambda r, s: one_round(n1_l, n_l, active, s),
+                    rst,
+                )
+            # ---- sampler sync: one [Q, M] psum (exact, additive) ----
+            n1_l = n1_l + my_slice(jax.lax.psum(dn1, axis))
+            n_l = n_l + my_slice(jax.lax.psum(dn, axis))
+            # ---- matcher sync: per-query §8 fold + exact k−1 add-back of
+            # cross-shard duplicate d₁ decrements ----
+            stacked = jax.tree.map(
+                lambda x: jax.lax.all_gather(x, axis), matcher
+            )                                                    # [S, Q, ..]
+            same_e = (stacked.video == snap.video[None]) & (
+                stacked.frame == snap.frame[None]
+            )
+            trans = (
+                same_e
+                & (snap.times_seen[None] == 1)
+                & (stacked.times_seen >= 2)
+            )                                                    # [S, Q, R]
+            k = jnp.sum(trans, axis=0)                           # [Q, R]
+            over = jnp.maximum(k - 1, 0).astype(n1_l.dtype)
+            corr = jnp.zeros((q_n, m), n1_l.dtype).at[
+                qi[:, None], jnp.where(k > 0, snap.chunk, 0)
+            ].add(jnp.where(k > 0, over, jnp.zeros((), n1_l.dtype)))
+            n1_l = n1_l + my_slice(corr)
+            merged = jax.lax.fori_loop(
+                1,
+                num_shards,
+                lambda s, dst: jax.vmap(merge_matcher)(
+                    dst, jax.tree.map(lambda x: x[s], stacked), snap
+                ),
+                jax.tree.map(lambda x: x[0], stacked),
+            )
+            # ---- ring-pressure accounting (merge_matcher_checked
+            # semantics, replicated): insertions per shard per window ----
+            inserted = stacked.total_inserted - snap.total_inserted[None]
+            hw = jnp.maximum(hw, jnp.max(inserted))
+            ov = ov | jnp.any(inserted >= cap_r)
+            # ---- counters / per-query trace / continue flag ----
+            step = step + jax.lax.psum(lstep, axis)
+            results = results + jax.lax.psum(lres, axis)
+            entry = jnp.stack([step, results], axis=-1)          # [Q, 2]
+            idx = jnp.where(active, tn, cap)
+            buf = jax.vmap(lambda bq, i, e: bq.at[i].set(e, mode="drop"))(
+                buf, idx, entry
+            )
+            tn = jnp.minimum(tn + active.astype(jnp.int32), cap)
+            cont = jnp.any(live_mask(step, results, n_l))
+            return (keys, n1_l, n_l, merged, merged, cache, step, results,
+                    buf, tn, wcalls, whits, hw, ov, windows + 1, cont)
+
+        cont0 = jnp.any(live_mask(step0, results0, n_l))
+        init = (
+            keys, n1_l, n_l, matcher0, matcher0, cache0, step0, results0,
+            jnp.zeros((q_n, cap, 2), jnp.int32),
+            jnp.zeros((q_n,), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), bool),
+            jnp.zeros((), jnp.int32), cont0,
+        )
+        (keys, n1_l, n_l, matcher, _snap, _cache, step, results, buf, tn,
+         wcalls, whits, hw, ov, windows, _c) = jax.lax.while_loop(
+            lambda st: st[-1], body, init
+        )
+        # final per-query checkpoint only where the trace would otherwise
+        # miss the end state (mirrors the §8 tail, vmapped over Q)
+        idx = jnp.where(
+            (tn == 0) | (tn >= cap), jnp.minimum(tn, cap - 1), cap
+        )
+        buf = jax.vmap(lambda bq, i, e: bq.at[i].set(e, mode="drop"))(
+            buf, idx, jnp.stack([step, results], axis=-1)
+        )
+        tn = jnp.clip(tn, 1, cap)
+        calls = jax.lax.psum(wcalls, axis)
+        hits = jax.lax.psum(whits, axis)
+        return (n1_l, n_l, matcher, keys, step, results, buf, tn, calls,
+                hits, hw, ov, windows)
+
+    sh2, rep = P(None, axis), P()
+    return get_shard_map()(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(rep, rep, rep, sh2, sh2, sh2, rep, rep, rep, rep),
+        out_specs=(
+            sh2, sh2, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep
+        ),
+        check_rep=False,
+    )(keys, step0, results0, n1, n, frames, matcher, chunks, result_limits,
+      cache)
+
+
+def run_search_multi_sharded(
+    carries: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    mesh,
+    detector: DetectorFn,
+    result_limits,
+    max_steps: int,
+    cohorts: int | None = None,
+    sync_every: int = 1,
+    axis: str = "data",
+    select: SelectFn | None = None,
+    cache_frames: int = 0,
+):
+    """Q concurrent queries × an M-sharded mesh, one deduplicated detector
+    pass per round per shard (DESIGN.md §10) — the composed lowering behind
+    ``SearchPlan`` plans with ``queries_axis`` + ``shards > 1``.
+
+    ``carries`` is a stacked ``ExSampleCarry`` (leading [Q] axis,
+    ``init_carry_multi`` / ``stack_carries``).  ``cohorts`` is each query's
+    GLOBAL per-round batch (default: one frame per shard) and must divide
+    over the mesh; chunk statistics are padded to the shard count with
+    exhausted dummies and trimmed on the way out.  Returns
+    ``(carries', traces, stats)`` with the same per-query trace semantics
+    as the solo sharded driver and §9-style sharing stats.
+    """
+    num_shards = mesh.shape[axis]
+    if cohorts is None:
+        cohorts = num_shards
+    if cohorts < num_shards or cohorts % num_shards:
+        raise ValueError(
+            f"cohorts={cohorts} must be a positive multiple of the "
+            f"{num_shards} '{axis}' shards"
+        )
+    if sync_every < 1:
+        raise ValueError(f"sync_every={sync_every} must be >= 1")
+    from repro.core.distributed import pad_chunks
+
+    q_n = int(carries.step.shape[0])
+    m0 = int(carries.sampler.n1.shape[-1])
+    padded = pad_chunks(carries.sampler, num_shards)
+    n1, n, frames = padded.n1, padded.n, padded.frames
+
+    if cache_frames:
+        from repro.serve.batcher import init_detection_cache
+
+        struct = jax.eval_shape(
+            detector, jax.random.PRNGKey(0), jnp.zeros((), jnp.int32)
+        )
+        cache = init_detection_cache(struct, cache_frames)
+    else:
+        cache = None
+
+    (n1_out, n_out, matcher, keys, step, results, buf, tn, calls, hits, hw,
+     ov, windows) = _search_multi_sharded_device(
+        carries.key,
+        carries.step,
+        carries.results,
+        n1,
+        n,
+        frames,
+        carries.matcher,
+        chunks,
+        jnp.broadcast_to(
+            jnp.asarray(result_limits, jnp.int32), (q_n,)
+        ),
+        cache,
+        mesh=mesh,
+        axis=axis,
+        detector=detector,
+        select=select,
+        cohorts=cohorts,
+        sync_every=sync_every,
+        max_steps=max_steps,
+        alpha0=carries.sampler.alpha0,
+        beta0=carries.sampler.beta0,
+    )
+    out = ExSampleCarry(
+        sampler=dataclasses.replace(
+            carries.sampler,
+            n1=n1_out[:, :m0],
+            n=n_out[:, :m0],
+            frames=carries.sampler.frames,
+        ),
+        matcher=matcher,
+        key=keys,
+        step=step,
+        results=results,
+    )
+    buf_host = np.asarray(buf)  # the single device→host sync
+    tn_host = np.asarray(tn)
+    traces = [
+        [(int(s), int(r)) for s, r in buf_host[q][: int(tn_host[q])]]
+        for q in range(q_n)
+    ]
+    stats = {
+        "detector_invocations": int(calls),
+        "cache_hits": int(hits),
+        "rounds": int(windows) * sync_every,
+        "frames_sampled": int(np.asarray(out.step).sum()),
+        "merge_high_water": int(hw),
+        "merge_overflow": bool(ov),
+        "merges": int(windows),
+    }
+    return out, traces, stats

@@ -5,16 +5,21 @@ pytree so it can be (a) jitted and scanned for simulation-scale benchmarks,
 (b) driven frame-by-frame from the host around a real serving stack, and
 (c) sharded (see ``repro.core.distributed``).
 
-Four drivers share the step/process machinery (DESIGN.md §7-§9):
-``run_search`` is the host reference loop (one dispatch + one sync per
-step), ``run_search_scan`` is the device-resident ``lax.while_loop``
-production driver — identical (step, results) trajectory, one host sync
-total — ``run_search_sharded`` is the mesh-scale variant: the same
-resident loop under ``shard_map`` with chunk statistics sharded over the
-``data`` axis and per-shard matchers merged every ``sync_every`` rounds
-(eventual-consistency Thompson, DESIGN.md §8) — and ``run_search_multi``
-advances Q concurrent queries (leading-[Q] carry) sharing one
-deduplicated + cached detector pass per round (DESIGN.md §9).
+Four driver implementations share the step/process machinery (DESIGN.md
+§7-§9): ``_host_search`` is the host reference loop (one dispatch + one
+sync per step), ``_scan_search`` is the device-resident
+``lax.while_loop`` production driver — identical (step, results)
+trajectory, one host sync total — ``_sharded_search`` is the mesh-scale
+variant: the same resident loop under ``shard_map`` with chunk
+statistics sharded over the ``data`` axis and per-shard matchers merged
+every ``sync_every`` rounds (eventual-consistency Thompson, DESIGN.md
+§8) — and ``_multi_search`` advances Q concurrent queries (leading-[Q]
+carry) sharing one deduplicated + cached detector pass per round
+(DESIGN.md §9).  The ONE public entry point over all of them (plus the
+composed Q×shards lowering and the async runtime) is
+``repro.core.plan.SearchPlan`` (DESIGN.md §10); the legacy
+``run_search*`` functions at the bottom of this module are deprecated
+shims over the equivalent plans.
 
 Detector plug-in protocol:  ``detector(key, frame_id) -> Detections``
 (see ``repro.sim.oracle.Detections``).  The oracle/noisy/neural detectors
@@ -23,6 +28,7 @@ all satisfy it.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import TYPE_CHECKING, Callable
 
@@ -161,7 +167,7 @@ def exsample_batch_step(
     return jax.lax.fori_loop(0, cohorts, body, carry)
 
 
-def run_search(
+def _host_search(
     carry: ExSampleCarry,
     chunks: ChunkIndex,
     *,
@@ -272,7 +278,7 @@ def _search_scan_device(
     return carry, buf, n
 
 
-def run_search_scan(
+def _scan_search(
     carry: ExSampleCarry,
     chunks: ChunkIndex,
     *,
@@ -283,7 +289,7 @@ def run_search_scan(
     method: str = "exact",
     trace_every: int = 0,
 ):
-    """Device-resident drop-in for ``run_search`` — same signature, same
+    """Device-resident drop-in for the host driver — same signature, same
     (step, results) trajectory for the same PRNG key, one host sync total.
 
     ``max_steps``/``cohorts``/``trace_every`` are compile-time constants
@@ -469,7 +475,8 @@ def _search_sharded_device(
             return jax.lax.psum(exh, axis) == num_shards
 
         def body(st):
-            key, n1_l, n_l, matcher, snap, step, results, buf, tn, cont = st
+            (key, n1_l, n_l, matcher, snap, step, results, buf, tn, hw, ov,
+             windows, cont) = st
             rst = (
                 key,
                 jnp.zeros((m,), n1_l.dtype),
@@ -520,6 +527,12 @@ def _search_sharded_device(
                 ),
                 jax.tree.map(lambda x: x[0], stacked),
             )
+            # ---- ring-pressure accounting (merge_matcher_checked
+            # semantics): per-shard insertions folded this window; the
+            # gathered stack is replicated so every shard agrees ----
+            inserted = stacked.total_inserted - snap.total_inserted  # [S]
+            hw = jnp.maximum(hw, jnp.max(inserted))
+            ov = ov | jnp.any(inserted >= snap.capacity)
             # ---- counters / trace / continue flag ----
             step = step + jax.lax.psum(lstep, axis)
             results = results + jax.lax.psum(lres, axis)
@@ -531,7 +544,8 @@ def _search_sharded_device(
                 & (step < max_steps)
                 & ~all_exhausted(n_l)
             )
-            return (key, n1_l, n_l, merged, merged, step, results, buf, tn, cont)
+            return (key, n1_l, n_l, merged, merged, step, results, buf, tn,
+                    hw, ov, windows + 1, cont)
 
         cont0 = (
             (results0 < rlimit)
@@ -540,11 +554,12 @@ def _search_sharded_device(
         )
         init = (
             key, n1_l, n_l, matcher0, matcher0, step0, results0,
-            jnp.zeros((cap, 2), jnp.int32), jnp.zeros((), jnp.int32), cont0,
+            jnp.zeros((cap, 2), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), bool),
+            jnp.zeros((), jnp.int32), cont0,
         )
-        key, n1_l, n_l, matcher, _snap, step, results, buf, tn, _ = (
-            jax.lax.while_loop(lambda st: st[-1], body, init)
-        )
+        (key, n1_l, n_l, matcher, _snap, step, results, buf, tn, hw, ov,
+         windows, _) = jax.lax.while_loop(lambda st: st[-1], body, init)
         # every sync already checkpointed itself; write a final entry only
         # when the trace would otherwise miss the end state — a run whose
         # very first continue-check failed (empty trace), or one that
@@ -554,19 +569,19 @@ def _search_sharded_device(
         )
         buf = buf.at[idx].set(jnp.stack([step, results]), mode="drop")
         tn = jnp.clip(tn, 1, cap)
-        return n1_l, n_l, matcher, key, step, results, buf, tn
+        return n1_l, n_l, matcher, key, step, results, buf, tn, hw, ov, windows
 
     sh, rep = P(axis), P()
     return get_shard_map()(
         shard_fn,
         mesh=mesh,
         in_specs=(rep, rep, rep, sh, sh, sh, rep, rep, rep),
-        out_specs=(sh, sh, rep, rep, rep, rep, rep, rep),
+        out_specs=(sh, sh, rep, rep, rep, rep, rep, rep, rep, rep, rep),
         check_rep=False,
     )(key, step0, results0, n1, n, frames, matcher, chunks, result_limit)
 
 
-def run_search_sharded(
+def _sharded_search(
     carry: ExSampleCarry,
     chunks: ChunkIndex,
     *,
@@ -578,7 +593,7 @@ def run_search_sharded(
     sync_every: int = 1,
     axis: str = "data",
 ):
-    """Mesh-scale drop-in for ``run_search_scan`` (DESIGN.md §8): the full
+    """Mesh-scale drop-in for the scanned driver (DESIGN.md §8): the full
     choose → sample → detect → match → update loop device-resident under
     ``shard_map``, chunk statistics sharded over ``axis``, per-shard
     matchers merged every ``sync_every`` rounds, one host sync total.
@@ -614,7 +629,8 @@ def run_search_sharded(
     state = pad_chunks(carry.sampler, num_shards)
     state = shard_sampler_state(state, mesh, axis)
 
-    n1, n, matcher, key, step, results, buf, tn = _search_sharded_device(
+    (n1, n, matcher, key, step, results, buf, tn, hw, ov, windows) = (
+        _search_sharded_device(
         carry.key,
         carry.step,
         carry.results,
@@ -632,7 +648,7 @@ def run_search_sharded(
         max_steps=max_steps,
         alpha0=carry.sampler.alpha0,
         beta0=carry.sampler.beta0,
-    )
+    ))
     out = ExSampleCarry(
         sampler=dataclasses.replace(
             carry.sampler, n1=n1[:m0], n=n[:m0], frames=carry.sampler.frames
@@ -644,7 +660,12 @@ def run_search_sharded(
     )
     buf_host = np.asarray(buf)  # the single device→host sync
     trace = [(int(s), int(r)) for s, r in buf_host[: int(tn)]]
-    return out, trace
+    stats = {
+        "merge_high_water": int(hw),
+        "merge_overflow": bool(ov),
+        "merges": int(windows),
+    }
+    return out, trace, stats
 
 
 # ---------------------------------------------------------------------------
@@ -877,7 +898,7 @@ def _search_multi_device(
     return c, buf, n, calls, hits, rounds
 
 
-def run_search_multi(
+def _multi_search(
     carries: ExSampleCarry,
     chunks: ChunkIndex,
     *,
@@ -958,3 +979,143 @@ def run_search_multi(
         "frames_sampled": int(np.asarray(out.step).sum()),
     }
     return out, traces, stats
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims — the five legacy entry points now lower through ONE
+# SearchPlan (repro.core.plan, DESIGN.md §10).  Each shim builds the plan
+# whose home-config lowering is the identical driver, so results stay
+# bit-for-bit what the legacy function returned.
+# ---------------------------------------------------------------------------
+
+
+def _warn_deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name}() is deprecated: build a repro.core.plan.SearchPlan and "
+        "call .run() (DESIGN.md §10) — this shim lowers to the identical "
+        "driver",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def run_search(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    result_limit: int,
+    max_steps: int,
+    cohorts: int = 1,
+    method: str = "exact",
+    trace_every: int = 0,
+):
+    """Deprecated shim over ``SearchPlan`` (strategy='host'); identical
+    semantics to the legacy host reference loop."""
+    from repro.core.plan import Execution, SearchPlan
+
+    _warn_deprecated("run_search")
+    res = SearchPlan(
+        result_limit=result_limit, max_steps=max_steps, cohorts=cohorts,
+        method=method, trace_every=trace_every,
+        execution=Execution(strategy="host"),
+    ).run(carry, chunks, detector=detector)
+    return res.carry, res.traces[0]
+
+
+def run_search_scan(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    result_limit: int,
+    max_steps: int,
+    cohorts: int = 1,
+    method: str = "exact",
+    trace_every: int = 0,
+):
+    """Deprecated shim over ``SearchPlan`` (strategy='scan'); identical
+    semantics to the legacy device-resident driver (DESIGN.md §7)."""
+    from repro.core.plan import Execution, SearchPlan
+
+    _warn_deprecated("run_search_scan")
+    res = SearchPlan(
+        result_limit=result_limit, max_steps=max_steps, cohorts=cohorts,
+        method=method, trace_every=trace_every,
+        execution=Execution(strategy="scan"),
+    ).run(carry, chunks, detector=detector)
+    return res.carry, res.traces[0]
+
+
+def run_search_sharded(
+    carry: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    mesh,
+    detector: DetectorFn,
+    result_limit: int,
+    max_steps: int,
+    cohorts: int | None = None,
+    sync_every: int = 1,
+    axis: str = "data",
+):
+    """Deprecated shim over ``SearchPlan`` (strategy='sharded'); identical
+    semantics to the legacy mesh-resident driver (DESIGN.md §8).  The
+    caller's ``mesh`` is passed through unchanged."""
+    from repro.core.plan import Execution, SearchPlan
+
+    _warn_deprecated("run_search_sharded")
+    num_shards = mesh.shape[axis]
+    res = SearchPlan(
+        result_limit=result_limit, max_steps=max_steps,
+        cohorts=num_shards if cohorts is None else cohorts,
+        execution=Execution(
+            strategy="sharded", shards=num_shards, axis=axis,
+            sync_every=sync_every,
+        ),
+    ).run(carry, chunks, detector=detector, mesh=mesh)
+    return res.carry, res.traces[0]
+
+
+def run_search_multi(
+    carries: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    detector: DetectorFn,
+    result_limits,
+    max_steps: int,
+    cohorts: int = 1,
+    method: str = "exact",
+    trace_every: int = 0,
+    select: SelectFn | None = None,
+    cache_frames: int = 0,
+):
+    """Deprecated shim over ``SearchPlan`` (queries_axis=True); identical
+    semantics to the legacy Q-batched driver (DESIGN.md §9), including the
+    legacy ``stats`` dict shape."""
+    from repro.core.plan import Execution, SearchPlan
+
+    _warn_deprecated("run_search_multi")
+    q_n = int(carries.step.shape[0])
+    if isinstance(result_limits, int):
+        limits: int | tuple = result_limits
+    else:
+        vals = np.asarray(result_limits).reshape(-1)
+        limits = int(vals[0]) if vals.size == 1 else tuple(
+            int(v) for v in vals
+        )
+    res = SearchPlan(
+        queries=q_n, result_limit=limits, max_steps=max_steps,
+        cohorts=cohorts, method=method, trace_every=trace_every,
+        execution=Execution(
+            queries_axis=True,
+            cache=cache_frames if cache_frames else None,
+        ),
+    ).run(carries, chunks, detector=detector, select=select)
+    stats = {
+        "detector_invocations": res.stats.detector_invocations,
+        "cache_hits": res.stats.cache_hits,
+        "rounds": res.stats.rounds,
+        "frames_sampled": res.stats.frames_sampled,
+    }
+    return res.carry, res.traces, stats

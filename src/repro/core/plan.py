@@ -1,0 +1,342 @@
+"""Declarative search plans — ONE entry point for every driver (DESIGN.md §10).
+
+The paper's contribution is a single adaptive-sampling loop (choose →
+sample → detect → match → update, §3); the repo grew five divergent entry
+points for it — host loop, device-resident scan, mesh-sharded, multi-query
+and async — whose capabilities could not be combined.  Following the
+query-plan / execution-strategy split of Focus (Hsieh et al., 2018) and
+EKO (Bang et al., 2021), a :class:`SearchPlan` now describes WHAT to
+search (queries, predicates via ``select``, result limits, frame budget)
+while :class:`Execution` describes HOW to run it (mesh shards, Q-axis
+batching, async workers, detection cache, merge schedule).  ``lower()``
+validates option compatibility (typed :class:`PlanError`\\ s) and compiles
+the plan to ONE device-resident driver — including the composition the
+legacy API could not express: Q queries × M-sharded statistics sharing one
+deduplicated detector pass per round across the mesh.
+
+    plan = SearchPlan(
+        queries=8, result_limit=40, max_steps=8_192, cohorts=8,
+        execution=Execution(queries_axis=True, shards=8, cache=-1),
+    )
+    result = plan.run(carries, chunks, detector=det, select=select)
+    result.results, result.traces, result.stats.detector_invocations
+
+Plans are plain data: ``to_dict()``/``from_dict()`` round-trip exactly
+(property-tested), so a plan can live in a config file or a CLI flag
+(``repro.launch.search --plan '<json>'``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+_STRATEGIES = ("auto", "host", "scan", "sharded", "async")
+_METHODS = ("auto", "exact", "wilson_hilferty", "pallas")
+
+
+class PlanError(ValueError):
+    """A :class:`SearchPlan` that cannot be lowered.
+
+    ``field`` names the offending option so tooling can point at it.
+    Subclasses: :class:`PlanValueError` (an option invalid on its own),
+    :class:`PlanCompatibilityError` (valid options that cannot combine).
+    """
+
+    def __init__(self, message: str, *, field: str | None = None):
+        super().__init__(message)
+        self.field = field
+
+
+class PlanValueError(PlanError):
+    """An option value that is invalid regardless of the rest of the plan."""
+
+
+class PlanCompatibilityError(PlanError):
+    """Individually-valid options that no lowering can combine."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Execution:
+    """HOW a plan runs — the execution strategy half of the split.
+
+    * ``strategy`` — ``"auto"`` picks the lowering from the other options
+      (DESIGN.md §10 rules); ``"host"``/``"scan"``/``"sharded"``/``"async"``
+      force a driver family.
+    * ``shards`` — data-axis mesh extent; ``> 1`` selects the mesh-resident
+      §8 loop (chunk statistics sharded, delta-psum merge schedule).
+    * ``queries_axis`` — the carry has a leading ``[Q]`` axis and the §9
+      Q-batched machinery (cross-query dedup, one detector pass per round)
+      is used even at Q=1.  Implied by ``SearchPlan.queries > 1``.
+    * ``sync_every`` — rounds between sampler/matcher merges on the mesh
+      paths (eventual-consistency Thompson, §8).
+    * ``async_workers`` — ``> 0`` lowers to the threaded
+      :class:`~repro.core.runtime.AsyncSearchDriver`; cannot combine with
+      mesh sharding or the Q axis.
+    * ``cache`` — :class:`~repro.serve.batcher.DetectionCache` capacity:
+      ``None`` disables, ``-1`` sizes it to the repository at run time,
+      positive values trade memory for evictions.  Requires the Q-axis
+      machinery (the cache lives on the shared detector pass).
+    """
+
+    strategy: str = "auto"
+    shards: int = 1
+    axis: str = "data"
+    queries_axis: bool = False
+    sync_every: int = 1
+    async_workers: int = 0
+    cache: Optional[int] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Execution":
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise PlanValueError(
+                f"unknown Execution option(s) {sorted(unknown)}; valid: "
+                f"{sorted(f.name for f in dataclasses.fields(cls))}",
+                field=sorted(unknown)[0],
+            )
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchPlan:
+    """WHAT to search: queries × limits × budget, plus the
+    :class:`Execution` strategy.  ``lower()`` validates and resolves the
+    plan to one driver; ``run()`` executes it and returns a
+    :class:`~repro.core.executor.SearchResult`.
+
+    ``result_limit`` is an int (shared by every query) or a tuple with one
+    entry per query.  ``method`` is the Thompson sampler — ``"auto"``
+    resolves to exact Gamma on host/scan/multi lowerings and to
+    Wilson–Hilferty on the mesh-resident paths (which never run the
+    rejection sampler, DESIGN.md §3/§8).
+    """
+
+    queries: int = 1
+    result_limit: Union[int, tuple] = 50
+    max_steps: int = 10_000
+    cohorts: int = 1
+    method: str = "auto"
+    trace_every: int = 0
+    execution: Execution = dataclasses.field(default_factory=Execution)
+
+    def __post_init__(self):
+        if isinstance(self.result_limit, list):
+            object.__setattr__(self, "result_limit", tuple(self.result_limit))
+        if isinstance(self.execution, dict):
+            object.__setattr__(
+                self, "execution", Execution.from_dict(self.execution)
+            )
+
+    # ---- validation + lowering resolution (DESIGN.md §10) -----------------
+
+    def resolve(self) -> tuple[str, str]:
+        """Validate and return ``(kind, method)``: the lowering target (one
+        of ``host | scan | async | sharded | multi | multi_sharded``) and
+        the resolved Thompson method.  Raises typed :class:`PlanError`\\ s
+        with actionable messages on invalid or incompatible options."""
+        ex = self.execution
+
+        # -- per-option value checks ---------------------------------------
+        if self.queries < 1:
+            raise PlanValueError(
+                f"queries={self.queries} must be >= 1 (a plan searches at "
+                "least one query)", field="queries")
+        if self.max_steps < 1:
+            raise PlanValueError(
+                f"max_steps={self.max_steps} must be >= 1", field="max_steps")
+        if self.cohorts < 1:
+            raise PlanValueError(
+                f"cohorts={self.cohorts} must be >= 1 (frames chosen per "
+                "Thompson round)", field="cohorts")
+        if self.trace_every < 0:
+            raise PlanValueError(
+                f"trace_every={self.trace_every} must be >= 0 (0 disables "
+                "recall-trace checkpoints)", field="trace_every")
+        if self.method not in _METHODS:
+            raise PlanValueError(
+                f"method={self.method!r} not in {_METHODS}", field="method")
+        if isinstance(self.result_limit, tuple):
+            if len(self.result_limit) != self.queries:
+                raise PlanValueError(
+                    f"result_limit has {len(self.result_limit)} entries for "
+                    f"queries={self.queries}; pass one int per query or a "
+                    "single shared int", field="result_limit")
+            limits = self.result_limit
+        else:
+            limits = (self.result_limit,)
+        if any(int(v) < 1 for v in limits):
+            raise PlanValueError(
+                f"result_limit={self.result_limit} must be >= 1 per query",
+                field="result_limit")
+        if ex.strategy not in _STRATEGIES:
+            raise PlanValueError(
+                f"strategy={ex.strategy!r} not in {_STRATEGIES}",
+                field="strategy")
+        if ex.shards < 1:
+            raise PlanValueError(
+                f"shards={ex.shards} must be >= 1", field="shards")
+        if not ex.axis:
+            raise PlanValueError("axis must be a non-empty mesh axis name",
+                                 field="axis")
+        if ex.sync_every < 1:
+            raise PlanValueError(
+                f"sync_every={ex.sync_every} must be >= 1 (a zero-round "
+                "merge window would never advance the resident loop)",
+                field="sync_every")
+        if ex.async_workers < 0:
+            raise PlanValueError(
+                f"async_workers={ex.async_workers} must be >= 0",
+                field="async_workers")
+        if ex.cache == 0:
+            raise PlanValueError(
+                "cache=0 is ambiguous: use cache=None to disable the "
+                "detection cache or a positive capacity (-1 = size to the "
+                "repository)", field="cache")
+        if ex.cache is not None and ex.cache < -1:
+            raise PlanValueError(
+                f"cache={ex.cache} must be None, -1 (repository-sized) or a "
+                "positive capacity", field="cache")
+
+        # -- cross-option compatibility ------------------------------------
+        multi = ex.queries_axis or self.queries > 1
+        sharded = ex.shards > 1 or ex.strategy == "sharded"
+        if self.queries > 1 and ex.strategy in ("host", "scan", "async"):
+            raise PlanCompatibilityError(
+                f"queries={self.queries} needs the Q-axis drivers; "
+                f"strategy={ex.strategy!r} is single-query — use "
+                "strategy='auto' (or 'sharded' to compose with a mesh)",
+                field="strategy")
+        if ex.cache is not None and not multi:
+            raise PlanCompatibilityError(
+                "cache requires queries_axis=True: the detection cache "
+                "lives on the shared Q-axis detector pass (set "
+                "Execution(queries_axis=True), valid at queries=1)",
+                field="cache")
+        if ex.async_workers > 0:
+            if ex.shards > 1:
+                raise PlanCompatibilityError(
+                    f"async_workers={ex.async_workers} with shards="
+                    f"{ex.shards}: the threaded async driver and the "
+                    "mesh-resident loop are alternative execution "
+                    "strategies — pick one (shards>1 already runs "
+                    "barrier-free via the §8 merge schedule)",
+                    field="async_workers")
+            if multi:
+                raise PlanCompatibilityError(
+                    "async_workers>0 with a queries axis is not lowerable: "
+                    "the async driver owns a single-query carry — run one "
+                    "plan per query or drop async_workers",
+                    field="async_workers")
+            if self.trace_every > 0:
+                raise PlanCompatibilityError(
+                    "async_workers>0 records no recall trace (merges land "
+                    "out of order); set trace_every=0",
+                    field="trace_every")
+            if ex.strategy not in ("auto", "async"):
+                raise PlanCompatibilityError(
+                    f"async_workers={ex.async_workers} conflicts with "
+                    f"strategy={ex.strategy!r}", field="strategy")
+        if ex.strategy == "async" and ex.async_workers == 0:
+            raise PlanCompatibilityError(
+                "strategy='async' needs async_workers >= 1",
+                field="async_workers")
+        if ex.shards > 1 and ex.strategy in ("host", "scan"):
+            raise PlanCompatibilityError(
+                f"shards={ex.shards} with strategy={ex.strategy!r}: only "
+                "the sharded lowerings place statistics on a mesh — use "
+                "strategy='auto' or 'sharded'", field="strategy")
+        if ex.strategy == "host" and multi:
+            raise PlanCompatibilityError(
+                "strategy='host' is the single-query reference loop; it "
+                "cannot take queries_axis=True or a cache", field="strategy")
+        if ex.strategy == "scan" and multi:
+            raise PlanCompatibilityError(
+                "strategy='scan' is the single-query resident loop; use "
+                "strategy='auto' to get the Q-axis lowering",
+                field="strategy")
+        if ex.sync_every > 1 and not sharded:
+            raise PlanCompatibilityError(
+                f"sync_every={ex.sync_every} only applies to the mesh "
+                "merge schedule; it needs shards>1 (or strategy='sharded')",
+                field="sync_every")
+        if sharded and self.cohorts % ex.shards:
+            raise PlanCompatibilityError(
+                f"cohorts={self.cohorts} must be a positive multiple of "
+                f"shards={ex.shards} (each shard processes cohorts/shards "
+                f"frames per round; try cohorts={ex.shards * max(1, self.cohorts // ex.shards)})",
+                field="cohorts")
+        if sharded and self.method in ("exact", "pallas"):
+            raise PlanCompatibilityError(
+                f"method={self.method!r} on a sharded lowering: the "
+                "mesh-resident path is Wilson–Hilferty only (DESIGN.md "
+                "§3/§8) — use method='auto' or 'wilson_hilferty'",
+                field="method")
+
+        # -- lowering kind (DESIGN.md §10 table) ---------------------------
+        if ex.async_workers > 0 or ex.strategy == "async":
+            kind = "async"
+        elif ex.strategy == "host":
+            kind = "host"
+        elif sharded and multi:
+            kind = "multi_sharded"
+        elif sharded:
+            kind = "sharded"
+        elif multi:
+            kind = "multi"
+        else:
+            kind = "scan"
+
+        if kind == "async" and self.method not in ("auto", "exact"):
+            raise PlanCompatibilityError(
+                f"method={self.method!r} on the async lowering: cohort "
+                "issue uses the exact Gamma sampler — use method='auto'",
+                field="method")
+
+        if self.method != "auto":
+            method = self.method
+        elif kind in ("sharded", "multi_sharded"):
+            method = "wilson_hilferty"
+        else:
+            method = "exact"
+        return kind, method
+
+    def lower(self):
+        """Validate and compile: returns a
+        :class:`~repro.core.executor.LoweredPlan` bound to one driver."""
+        from repro.core.executor import lower
+
+        return lower(self)
+
+    def run(self, carry, chunks, *, detector, select=None, mesh=None):
+        """``lower()`` + execute.  See
+        :meth:`repro.core.executor.LoweredPlan.run`."""
+        return self.lower().run(
+            carry, chunks, detector=detector, select=select, mesh=mesh
+        )
+
+    # ---- serde ------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if isinstance(d["result_limit"], tuple):
+            d["result_limit"] = list(d["result_limit"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SearchPlan":
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise PlanValueError(
+                f"unknown SearchPlan option(s) {sorted(unknown)}; valid: "
+                f"{sorted(f.name for f in dataclasses.fields(cls))}",
+                field=sorted(unknown)[0],
+            )
+        if isinstance(d.get("execution"), dict):
+            d["execution"] = Execution.from_dict(d["execution"])
+        return cls(**d)

@@ -1,43 +1,48 @@
 """Production search driver: ExSample distinct-object query end-to-end.
 
-Wires together: simulated repository (or any FrameStore), the batcher, a
-detector (oracle or neural backbone), the ExSample core, the cost model
-and the checkpoint manager — the full Algorithm 1 deployment loop with
-resumable state.
+Wires together: simulated repository (or any FrameStore), a detector
+(oracle or noisy), the ExSample core behind ONE ``SearchPlan`` (DESIGN.md
+§10), the cost model and the checkpoint manager — the full Algorithm 1
+deployment loop with resumable state.
 
   PYTHONPATH=src python -m repro.launch.search --limit 50 --cohorts 16
-  PYTHONPATH=src python -m repro.launch.search --limit 50 --mesh 4
-  PYTHONPATH=src python -m repro.launch.search --limit 20 --queries 0 1 2 3
+  PYTHONPATH=src python -m repro.launch.search \\
+      --plan '{"result_limit": 50, "max_steps": 50000, "cohorts": 16}'
+  PYTHONPATH=src python -m repro.launch.search \\
+      --plan '{"queries": 4, "result_limit": 20, "max_steps": 50000,
+               "cohorts": 8, "execution": {"queries_axis": true,
+               "shards": 8, "cache": -1}}'
 
-``--mesh N`` runs the sharded device-resident driver
-(``run_search_sharded``, DESIGN.md §8) on an N-way ``data`` mesh.  When
-the host exposes fewer devices, ``main()`` re-execs into a child with
-simulated host devices (``launch.mesh.ensure_host_devices``).
-
-``--queries c0 c1 …`` runs one concurrent search per listed query class
-through ``run_search_multi`` (DESIGN.md §9): a single class-agnostic
-detector pass per round is deduplicated and cached across the queries,
-and each query filters the shared detections to its own class.
+``--plan`` takes a JSON ``SearchPlan.to_dict()`` document (or ``@file``)
+and is the canonical path: the planner validates option compatibility and
+lowers to one device-resident driver — host loop, scanned, mesh-sharded,
+Q-batched, async, or the composed Q×shards driver the legacy flags could
+never combine.  The legacy flag combinations (``--mesh/--sync-every``,
+``--queries/--cache-frames``, ``--driver``) still work but are deprecated:
+they are translated into the equivalent plan and a ``DeprecationWarning``
+is emitted.  When the plan needs more devices than the host exposes,
+``main()`` re-execs into a child with simulated host devices
+(``launch.mesh.ensure_host_devices``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.exsample_paper import bdd, dashcam
 from repro.core import (
+    Execution,
+    SearchPlan,
     init_carry,
     init_carry_multi,
     init_matcher,
     init_state,
-    run_search,
-    run_search_multi,
-    run_search_scan,
-    run_search_sharded,
 )
 from repro.core.baselines import FrameSchedule, run_schedule
 from repro.sim import generate
@@ -46,47 +51,95 @@ from repro.sim.oracle import class_select, noisy_detect, oracle_detect
 from repro.train.checkpoint import CheckpointManager
 
 
-def _run_multi(args, repo, chunks) -> None:
-    """--queries path: Q concurrent class searches through one shared,
-    deduplicated + cached detector pass per round (DESIGN.md §9)."""
-    q_n = len(args.queries)
-    if args.detector == "oracle":
-        det = lambda key, frame: oracle_detect(repo, frame, query_class=None)
-    else:
-        det = lambda key, frame: noisy_detect(key, repo, frame, query_class=None)
-    select = class_select(repo, args.queries)
+def build_plan(args) -> SearchPlan:
+    """``--plan`` JSON (inline or ``@file``) or the deprecated legacy flag
+    translation — both end in one validated :class:`SearchPlan`."""
+    if args.plan:
+        text = args.plan
+        if text.startswith("@"):
+            with open(text[1:]) as f:
+                text = f.read()
+        return SearchPlan.from_dict(json.loads(text))
 
-    keys = jnp.stack([
-        jax.random.fold_in(jax.random.PRNGKey(args.seed), q) for q in range(q_n)
-    ])
-    carries = init_carry_multi(
-        init_state(chunks.length), init_matcher(max_results=8192), keys
+    legacy = []
+    if args.mesh > 1 or args.sync_every != 1:
+        legacy.append("--mesh/--sync-every")
+    if args.queries:
+        legacy.append("--queries/--cache-frames")
+    if args.driver != "scan":
+        legacy.append("--driver")
+    if legacy:
+        warnings.warn(
+            f"{', '.join(legacy)} are deprecated: pass the equivalent "
+            "--plan '<json>' (SearchPlan.to_dict schema, DESIGN.md §10)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+
+    shards = args.mesh if args.mesh > 1 else 1
+    # the legacy CLI silently ignored --sync-every without --mesh; keep
+    # that contract rather than letting the planner reject the combination
+    sync_every = args.sync_every if shards > 1 else 1
+    if args.sync_every != 1 and shards == 1:
+        print(f"--sync-every {args.sync_every} ignored without --mesh "
+              "(merge schedule is a mesh-lowering option)")
+    cohorts = args.cohorts
+    if shards > 1 and cohorts % shards:
+        cohorts = cohorts - cohorts % shards or shards
+        print(f"--cohorts {args.cohorts} → {cohorts} "
+              f"(must be a multiple of --mesh {shards})")
+    if args.queries:
+        cache = args.cache_frames if args.cache_frames != 0 else None
+        return SearchPlan(
+            queries=len(args.queries), result_limit=args.limit,
+            max_steps=args.max_steps, cohorts=cohorts, trace_every=256,
+            execution=Execution(
+                queries_axis=True, shards=shards,
+                sync_every=sync_every, cache=cache,
+            ),
+        )
+    strategy = "host" if (args.driver == "host" and shards == 1) else "auto"
+    if args.driver == "host" and shards > 1:
+        print(f"--driver host ignored: --mesh {shards} selects the sharded "
+              "lowering (DESIGN.md §8)")
+    return SearchPlan(
+        result_limit=args.limit, max_steps=args.max_steps, cohorts=cohorts,
+        trace_every=256,
+        execution=Execution(
+            strategy=strategy, shards=shards, sync_every=sync_every,
+        ),
     )
-    cache = args.cache_frames if args.cache_frames >= 0 else chunks.total_frames
-    t0 = time.time()
-    out, traces, stats = run_search_multi(
-        carries, chunks, detector=det, select=select,
-        result_limits=args.limit, max_steps=args.max_steps,
-        cohorts=args.cohorts, trace_every=256, cache_frames=cache,
-    )
-    wall = time.time() - t0
-    steps = [int(s) for s in out.step]
-    results = [int(r) for r in out.results]
-    for q in range(q_n):
-        print(f"  query class {args.queries[q]}: {results[q]} results / "
-              f"{steps[q]:,} frames")
-    inv = stats["detector_invocations"]
+
+
+def _print_result(res, args, wall: float) -> None:
     rates = CostRates()
-    print(f"ExSample multi-query (Q={q_n}): {sum(results)} results / "
-          f"{stats['frames_sampled']:,} frames sampled / {inv:,} detector "
-          f"invocations ({stats['cache_hits']:,} cache hits, "
-          f"{stats['frames_sampled'] / max(inv, 1):.2f}x amortization) / "
-          f"est. {sampling_cost(inv, rates).total_s:.0f} gpu·s "
+    st = res.stats
+    if res.num_queries > 1:
+        for q in range(res.num_queries):
+            print(f"  query {q}: {res.results[q]} results / "
+                  f"{res.steps[q]:,} frames")
+    cost = sampling_cost(st.detector_invocations, rates)
+    line = (f"ExSample[{res.kind}]: {sum(res.results)} results / "
+            f"{st.frames_sampled:,} frames sampled / "
+            f"{st.detector_invocations:,} detector invocations")
+    if st.cache_hits or res.num_queries > 1:
+        line += (f" ({st.cache_hits:,} cache hits, "
+                 f"hit rate {st.cache_hit_rate:.2f}, "
+                 f"{st.amortization:.2f}x amortization)")
+    print(line + f" / est. {cost.total_s:.0f} gpu·s "
           f"(driver wall {wall:.1f}s)")
+    if st.merges:
+        print(f"  merges: {st.merges} windows, ring high-water "
+              f"{st.merge_high_water}/{st.matcher_capacity}"
+              + (" OVERFLOW" if st.merge_overflow else ""))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--plan", default="",
+                    help="SearchPlan JSON (or @file) — the canonical path "
+                         "(DESIGN.md §10); overrides the deprecated "
+                         "driver-shaping flags below")
     ap.add_argument("--dataset", default="dashcam", choices=["dashcam", "bdd"])
     ap.add_argument("--scale", type=float, default=0.2)
     ap.add_argument("--query-class", type=int, default=0)
@@ -95,35 +148,39 @@ def main() -> None:
     ap.add_argument("--max-steps", type=int, default=50_000)
     ap.add_argument("--detector", default="oracle", choices=["oracle", "noisy"])
     ap.add_argument("--driver", default="scan", choices=["scan", "host"],
-                    help="scan = device-resident lax.while_loop driver "
-                         "(DESIGN.md §7); host = per-step reference loop")
+                    help="[deprecated: use --plan] scan = device-resident "
+                         "driver; host = per-step reference loop")
     ap.add_argument("--mesh", type=int, default=1,
-                    help="N>1 runs run_search_sharded on an N-way data mesh "
-                         "(DESIGN.md §8); simulated host devices are forced "
-                         "automatically")
+                    help="[deprecated: use --plan] N>1 shards the search "
+                         "over an N-way data mesh (DESIGN.md §8); simulated "
+                         "host devices are forced automatically")
     ap.add_argument("--sync-every", type=int, default=1,
-                    help="rounds between sampler/matcher merges on the "
-                         "sharded driver (eventual-consistency Thompson)")
+                    help="[deprecated: use --plan] rounds between "
+                         "sampler/matcher merges on the mesh lowerings")
     ap.add_argument("--queries", type=int, nargs="+", default=None,
                     metavar="CLASS",
-                    help="multi-query mode (DESIGN.md §9): one concurrent "
-                         "search per listed query class, sharing a single "
-                         "deduplicated+cached class-agnostic detector pass "
-                         "per round (run_search_multi)")
+                    help="[deprecated: use --plan] one concurrent search per "
+                         "listed query class through the Q-axis lowering "
+                         "(DESIGN.md §9); with --plan, lists the per-query "
+                         "classes (default 0..Q-1)")
     ap.add_argument("--cache-frames", type=int, default=-1,
-                    help="detection-cache capacity for --queries "
-                         "(-1 = one slot per repository frame, 0 = off)")
+                    help="[deprecated: use --plan] detection-cache capacity "
+                         "for --queries (-1 = one slot per repository "
+                         "frame, 0 = off)")
     ap.add_argument("--baseline", action="store_true",
                     help="also run random+ for comparison")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
-    if args.mesh > 1:
+    plan = build_plan(args)
+    lowered = plan.lower()   # validate BEFORE re-exec / data generation
+
+    if plan.execution.shards > 1:
         from repro.launch.mesh import ensure_host_devices
 
         ensure_host_devices(
-            args.mesh,
+            plan.execution.shards,
             argv=[sys.executable, "-m", "repro.launch.search"] + sys.argv[1:],
         )
 
@@ -133,68 +190,67 @@ def main() -> None:
     repo, chunks = generate(setup.repo)
     print(f"{args.dataset}: {chunks.total_frames:,} frames / "
           f"{chunks.num_chunks} chunks / {repo.num_instances} instances")
+    print(f"plan: lowering={lowered.kind} method={lowered.method} "
+          f"{json.dumps(plan.to_dict())}")
 
-    if args.queries:
-        _run_multi(args, repo, chunks)
-        return
-
-    if args.detector == "oracle":
-        det = lambda key, frame: oracle_detect(
-            repo, frame, query_class=args.query_class
+    q_n = plan.queries
+    multi = lowered.kind in ("multi", "multi_sharded")
+    select = None
+    if multi:
+        classes = args.queries if args.queries else list(range(q_n))
+        if len(classes) != q_n:
+            raise SystemExit(
+                f"--queries lists {len(classes)} classes for a "
+                f"{q_n}-query plan")
+        if args.detector == "oracle":
+            det = lambda key, frame: oracle_detect(
+                repo, frame, query_class=None)
+        else:
+            det = lambda key, frame: noisy_detect(
+                key, repo, frame, query_class=None)
+        select = class_select(repo, classes)
+        keys = jnp.stack([
+            jax.random.fold_in(jax.random.PRNGKey(args.seed), q)
+            for q in range(q_n)
+        ])
+        carry = init_carry_multi(
+            init_state(chunks.length), init_matcher(max_results=8192), keys
         )
     else:
-        det = lambda key, frame: noisy_detect(
-            key, repo, frame, query_class=args.query_class
+        if args.detector == "oracle":
+            det = lambda key, frame: oracle_detect(
+                repo, frame, query_class=args.query_class)
+        else:
+            det = lambda key, frame: noisy_detect(
+                key, repo, frame, query_class=args.query_class)
+        carry = init_carry(
+            init_state(chunks.length), init_matcher(max_results=8192),
+            jax.random.PRNGKey(args.seed),
         )
 
-    carry = init_carry(
-        init_state(chunks.length),
-        init_matcher(max_results=8192),
-        jax.random.PRNGKey(args.seed),
-    )
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.time()
-    if args.mesh > 1:
-        from repro.launch.mesh import make_data_mesh
-
-        cohorts = args.cohorts - args.cohorts % args.mesh or args.mesh
-        if cohorts != args.cohorts:
-            print(f"--cohorts {args.cohorts} → {cohorts} "
-                  f"(must be a multiple of --mesh {args.mesh})")
-        if args.driver != "scan":
-            print(f"--driver {args.driver} ignored: --mesh {args.mesh} "
-                  "selects the sharded driver (DESIGN.md §8)")
-        carry, trace = run_search_sharded(
-            carry, chunks, mesh=make_data_mesh(args.mesh), detector=det,
-            result_limit=args.limit, max_steps=args.max_steps,
-            cohorts=cohorts, sync_every=args.sync_every,
-        )
-    else:
-        driver = run_search_scan if args.driver == "scan" else run_search
-        carry, trace = driver(
-            carry, chunks, detector=det, result_limit=args.limit,
-            max_steps=args.max_steps, cohorts=args.cohorts, trace_every=256,
-        )
+    res = lowered.run(carry, chunks, detector=det, select=select)
     wall = time.time() - t0
-    rates = CostRates()
-    cost = sampling_cost(int(carry.step), rates)
-    print(f"ExSample: {int(carry.results)} results / {int(carry.step):,} frames "
-          f"/ est. {cost.total_s:.0f} gpu·s (driver wall {wall:.1f}s)")
+    _print_result(res, args, wall)
     if mgr:
-        mgr.save(int(carry.step), carry, extra={"query": args.query_class})
+        mgr.save(res.stats.frames_sampled, res.carry,
+                 extra={"plan": plan.to_dict()})
         print(f"state checkpointed to {args.ckpt_dir}")
-    if args.baseline:
+    if args.baseline and not multi:
         base = init_carry(
             init_state(chunks.length), init_matcher(max_results=8192),
             jax.random.PRNGKey(args.seed),
         )
         rp, _ = run_schedule(
             base, chunks,
-            FrameSchedule.randomplus(chunks.total_frames, args.max_steps),
-            detector=det, result_limit=args.limit,
+            FrameSchedule.randomplus(chunks.total_frames, plan.max_steps),
+            detector=det, result_limit=res.plan.result_limit
+            if isinstance(res.plan.result_limit, int) else args.limit,
         )
+        ex_steps = max(res.stats.frames_sampled, 1)
         print(f"random+: {int(rp.results)} results / {int(rp.step):,} frames "
-              f"→ savings {int(rp.step) / max(int(carry.step), 1):.2f}x")
+              f"→ savings {int(rp.step) / ex_steps:.2f}x")
 
 
 if __name__ == "__main__":

@@ -7,12 +7,17 @@ whose results are dropped.  It also implements the straggler policy from
 DESIGN.md §5: a cohort is *never* a barrier — late frames just join a
 later batch, which is sound because sampler updates commute (§3.7.1).
 
-The device-side half of the same machinery serves the multi-query driver
-(DESIGN.md §9): ``dedup_first_index`` collapses the union of several
-queries' cohort frames into one detector batch without dropping any slot,
-and ``DetectionCache`` is a direct-mapped, device-resident cache of raw
+The device-side half of the same machinery serves the Q-axis lowerings of
+``SearchPlan`` — the single-device multi-query driver (DESIGN.md §9) and,
+per shard, the composed Q×shards driver (DESIGN.md §10):
+``dedup_first_index`` collapses the union of several queries' cohort
+frames into one detector batch without dropping any slot, and
+``DetectionCache`` is a direct-mapped, device-resident cache of raw
 detector output so a frame decoded+detected for one query is reused by
-every later query that samples it (the Focus/EKO shared-ingest economics).
+every later query that samples it (the Focus/EKO shared-ingest
+economics).  The composed driver instantiates one cache per shard and
+keeps them replicas by all-gathering each round's fresh detections, so a
+frame detected on any shard hits everywhere from the next round on.
 """
 from __future__ import annotations
 
