@@ -5,7 +5,13 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import init_carry, init_matcher, init_state, run_search
+from repro.core import (
+    Execution,
+    SearchPlan,
+    init_carry,
+    init_matcher,
+    init_state,
+)
 from repro.core.distributed import straggler_robust_rounds
 from repro.sim import RepoSpec, generate
 from repro.sim.oracle import oracle_detect
@@ -25,10 +31,10 @@ def main():
             init_state(chunks.length), init_matcher(max_results=1024),
             jax.random.PRNGKey(0),
         )
-        out, _ = run_search(
-            carry, chunks, detector=det, result_limit=limit,
-            max_steps=3000, cohorts=b,
-        )
+        out = SearchPlan(
+            result_limit=limit, max_steps=3000, cohorts=b,
+            execution=Execution(strategy="host"),
+        ).run(carry, chunks, detector=det).carry
         print(f"{b},{int(out.step)},{int(out.results)}")
 
     # straggler mitigation: barrier vs commutative-async round time

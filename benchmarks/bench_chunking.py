@@ -10,7 +10,13 @@ from __future__ import annotations
 import jax
 
 from repro.configs.exsample_paper import dashcam
-from repro.core import init_carry, init_matcher, init_state, run_search
+from repro.core import (
+    Execution,
+    SearchPlan,
+    init_carry,
+    init_matcher,
+    init_state,
+)
 from repro.core.baselines import FrameSchedule, run_schedule
 from repro.core.chunks import build_chunks
 from repro.sim import generate
@@ -42,10 +48,10 @@ def main(scale: float = 0.15):
             init_state(chunks.length), init_matcher(max_results=2048),
             jax.random.PRNGKey(0),
         )
-        ex, _ = run_search(
-            carry, chunks, detector=det, result_limit=limit,
-            max_steps=8000, cohorts=8,
-        )
+        ex = SearchPlan(
+            result_limit=limit, max_steps=8000, cohorts=8,
+            execution=Execution(strategy="host"),
+        ).run(carry, chunks, detector=det).carry
         print(f"{chunk_frames},{chunks.num_chunks},{int(ex.step)},"
               f"{int(rp.step)/max(int(ex.step),1):.2f}")
     print(f"random+_reference,{int(rp.step)} frames")

@@ -16,7 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.exsample_paper import bdd, dashcam
-from repro.core import init_carry, init_matcher, init_state, run_search_scan
+from repro.core import (
+    Execution,
+    SearchPlan,
+    init_carry,
+    init_matcher,
+    init_state,
+)
 from repro.core.baselines import (
     FrameSchedule,
     run_greedy,
@@ -76,10 +82,10 @@ def run(scale: float = 0.15, classes=(0, 1, 2), recalls=(0.1, 0.5),
                 # device-resident driver: identical (step, results) to the
                 # host loop (tests/test_scan_driver.py) at a fraction of the
                 # wall-clock — bench_overhead.py quantifies the gap
-                ex, _ = run_search_scan(
-                    _fresh(chunks, seed), chunks, detector=det,
+                ex = SearchPlan(
                     result_limit=limit, max_steps=max_steps, cohorts=cohorts,
-                )
+                    execution=Execution(strategy="scan"),
+                ).run(_fresh(chunks, seed), chunks, detector=det).carry
                 rp, _ = run_schedule(
                     _fresh(chunks, seed), chunks,
                     FrameSchedule.randomplus(chunks.total_frames, max_steps),

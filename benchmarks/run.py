@@ -5,6 +5,8 @@
   bench_batched      -- paper 3.7.1 (cohort batching) + straggler model
   bench_sharded      -- sharded driver steps/sec at 1/2/4/8 shards + parity
   bench_multiquery   -- Q=8 shared detector pass vs sequential (DESIGN.md §9)
+  bench_async_compose -- Q=8 × 4 async workers elastic slot pool vs
+                        sequential single-query async (DESIGN.md §11)
   bench_plan_compose -- Q=8 × 8-shard composed lowering vs sequential-sharded
                         and single-device multi (DESIGN.md §10)
   bench_overhead     -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
@@ -53,11 +55,31 @@ def should_skip(spec: BenchSpec, available_devices: int) -> str | None:
             f"{available_devices} device(s); set "
             "--xla_force_host_platform_device_count or run on more devices"
         )
+    if spec.execution.async_workers > 0 and not _threads_available():
+        return (
+            f"needs {spec.execution.async_workers} async worker thread(s) "
+            "but this host cannot start threads"
+        )
     return None
+
+
+def _threads_available() -> bool:
+    """Probe that worker threads can actually start on this host (some
+    sandboxed/restricted runtimes refuse thread creation)."""
+    import threading
+
+    try:
+        t = threading.Thread(target=lambda: None, daemon=True)
+        t.start()
+        t.join(timeout=5.0)
+        return not t.is_alive()
+    except RuntimeError:
+        return False
 
 
 def _sections() -> list[BenchSpec]:
     from benchmarks import (
+        bench_async_compose,
         bench_batched,
         bench_bias,
         bench_chunking,
@@ -82,6 +104,10 @@ def _sections() -> list[BenchSpec]:
         BenchSpec("multiquery(sec9)",
                   lambda quick: bench_multiquery.main(quick=quick),
                   execution=Execution(queries_axis=True, cache=-1)),
+        BenchSpec("async_compose(sec11)",
+                  lambda quick: bench_async_compose.main(quick=quick),
+                  execution=Execution(queries_axis=True, async_workers=4,
+                                      cache=-1)),
         BenchSpec("plan_compose(sec10)",
                   lambda quick: bench_plan_compose.main(quick=quick),
                   execution=Execution(queries_axis=True, shards=8, cache=-1),

@@ -21,6 +21,8 @@ from repro.core.thompson import (
 )
 from repro.core.matcher import (
     MatcherState,
+    ResultLog,
+    eviction_mask,
     init_matcher,
     init_matcher_multi,
     match_and_update,
@@ -47,6 +49,11 @@ from repro.core.plan import (
     PlanValueError,
     SearchPlan,
 )
+from repro.core.runtime import (
+    AsyncMultiSearchDriver,
+    AsyncSearchDriver,
+    MatcherRingOverflow,
+)
 from repro.core.executor import (
     LoweredPlan,
     SearchResult,
@@ -62,6 +69,8 @@ __all__ = [
     "choose_chunks", "choose_chunks_batched", "draw_scores", "gamma_params",
     "MatcherState", "init_matcher", "init_matcher_multi", "match_and_update",
     "merge_matcher", "merge_matcher_checked", "pairwise_iou",
+    "ResultLog", "eviction_mask",
+    "AsyncSearchDriver", "AsyncMultiSearchDriver", "MatcherRingOverflow",
     "ExSampleCarry", "init_carry", "init_carry_multi", "stack_carries",
     "exsample_step", "exsample_batch_step",
     "run_search", "run_search_scan", "run_search_sharded", "run_search_multi",

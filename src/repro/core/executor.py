@@ -1,8 +1,8 @@
 """SearchPlan lowering + execution (DESIGN.md §10).
 
 ``lower(plan)`` resolves a declarative :class:`~repro.core.plan.SearchPlan`
-to ONE driver (host | scan | async | sharded | multi | multi_sharded) and
-``LoweredPlan.run`` executes it, returning a structured
+to ONE driver (host | scan | async | sharded | multi | multi_sharded |
+async_multi) and ``LoweredPlan.run`` executes it, returning a structured
 :class:`SearchResult` — per-query step/results/trace plus uniform
 :class:`SearchStats` (detector invocations, cache hit rate, matcher merge
 high-water / overflow, async scheduling counters) instead of the raw carry
@@ -55,7 +55,10 @@ class SearchStats:
       insertions folded in a single merge window, and whether any window
       reached ring capacity (sharded + composed syncs, async merges).
     * ``merges`` / ``reissues`` / ``duplicate_drops`` — async scheduler
-      counters (DESIGN.md §5).
+      counters (DESIGN.md §5/§11).
+    * ``results_spilled`` — ring-evicted results drained to the host
+      :class:`~repro.core.matcher.ResultLog` at merge boundaries (the
+      async lowerings' spill contract, DESIGN.md §11).
     * ``matcher_inserted`` / ``matcher_capacity`` — final ring totals.
     """
 
@@ -68,6 +71,7 @@ class SearchStats:
     merges: int = 0
     reissues: int = 0
     duplicate_drops: int = 0
+    results_spilled: int = 0
     matcher_inserted: int = 0
     matcher_capacity: int = 0
 
@@ -138,7 +142,7 @@ class LoweredPlan:
         mesh=None,
     ) -> SearchResult:
         p, ex = self.plan, self.plan.execution
-        multi = self.kind in ("multi", "multi_sharded")
+        multi = self.kind in ("multi", "multi_sharded", "async_multi")
         ndim = jnp.ndim(carry.step)
         if multi and ndim != 1:
             raise PlanError(
@@ -198,9 +202,35 @@ class LoweredPlan:
                 merges=int(driver.stats["merges"]),
                 reissues=int(driver.stats["reissues"]),
                 duplicate_drops=int(driver.stats["duplicate_drops"]),
+                results_spilled=int(driver.stats["spilled"]),
                 **_matcher_totals(out),
             )
             return self._package(out, [[(step, int(out.results))]], stats)
+
+        if self.kind == "async_multi":
+            from repro.core.runtime import AsyncMultiSearchDriver
+
+            driver = AsyncMultiSearchDriver(
+                carry, chunks, detector, cohorts=p.cohorts,
+                num_workers=ex.async_workers,
+                result_limits=[int(v) for v in limits],
+                max_steps=p.max_steps, method=self.method, select=select,
+                cache_frames=cache or 0, trace_every=p.trace_every,
+            )
+            out = driver.run()
+            stats = SearchStats(
+                detector_invocations=int(driver.stats["detector_invocations"]),
+                cache_hits=int(driver.stats["cache_hits"]),
+                rounds=int(driver.stats["rounds"]),
+                frames_sampled=int(np.asarray(out.step).sum()),
+                merge_high_water=int(driver.stats["merge_high_water"]),
+                merges=int(driver.stats["merges"]),
+                reissues=int(driver.stats["reissues"]),
+                duplicate_drops=int(driver.stats["duplicate_drops"]),
+                results_spilled=int(driver.stats["spilled"]),
+                **_matcher_totals(out),
+            )
+            return self._package(out, driver.traces, stats)
 
         if mesh is None:
             if ex.axis != "data":

@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from functools import partial
-from typing import TYPE_CHECKING, Callable
+from typing import TYPE_CHECKING, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -701,43 +701,45 @@ def init_carry_multi(
     )
 
 
-def _multi_round(
+class RoundChoice(NamedTuple):
+    """The choose half of one multi-query round (DESIGN.md §9/§11): every
+    per-query decision that depends only on round-start state.  Precomputing
+    it is what lets the async slot scheduler issue a *cohort slot* — chunk
+    winners, rank base, key split — and hand the expensive process half to
+    a worker while the driver state stays authoritative."""
+
+    key_next: jax.Array    # key[Q] — per-query key after this round
+    chunk_ids: jax.Array   # i32[Q, C] — Thompson winners
+    ranks: jax.Array       # i32[Q, C] — random+ rank (n0 + within-round occ)
+    frame_ids: jax.Array   # i32[Q, C] — sampled frames
+    det_keys: jax.Array    # key[Q, C] — per-slot detector keys
+
+
+class RoundAux(NamedTuple):
+    """Process-half byproducts the resident loop discards but the async
+    merge needs: the flat frame batch, which slots were freshly detected
+    (``need`` — unique, uncached, live representatives) and the raw
+    detector outputs, so fresh detections can be published into the shared
+    :class:`~repro.serve.batcher.DetectionCache` at the merge boundary."""
+
+    flat_frames: jax.Array   # i32[Q*C]
+    need: jax.Array          # bool[Q*C]
+    fresh: "Detections"      # detector output, leading [Q*C]
+
+
+def multi_round_choose(
     mc: ExSampleCarry,
-    cache,
     chunks: ChunkIndex,
-    active: jax.Array,       # bool[Q] — round-start liveness per query
     *,
-    detector: DetectorFn,
-    select: SelectFn | None,
     cohorts: int,
     method: str,
-):
-    """One synchronized multi-query round (DESIGN.md §9).
-
-    Every active query draws ``cohorts`` Thompson picks from ITS OWN
-    statistics (one batched ``choose_chunks_batched`` call), the union of
-    the Q·C sampled frames is deduplicated — and filtered through the
-    shared ``DetectionCache`` when enabled — into one detector pass, and
-    the detections scatter back so each query matches/updates against
-    exactly its own cohort's slots.  Per query the fold replicates
-    ``exsample_batch_step`` bit-for-bit: chunk choice from round-start
-    statistics, within-round random+ ranks advancing sequentially
-    (``occ``), matcher folded frame-by-frame, additive sampler deltas.
-
-    Finished queries stay shape-stable: their slots are excluded from the
-    dedup (never detected on their behalf), their detections are masked
-    invalid, their sampler/step/key updates are gated to zero.
-
-    Returns ``(mc', cache', fresh_detections i32[], cache_hits i32[])`` —
-    ``fresh_detections`` counts what a real deployment would actually send
-    through the detector this round (unique, uncached, live frames); the
-    simulator still evaluates the full padded batch for static shapes.
-    """
-    from repro.serve.batcher import cache_insert, cache_lookup, dedup_first_index
-
-    q_n = mc.key.shape[0]
+) -> RoundChoice:
+    """Choose phase of one multi-query round: split every query's key,
+    draw ``cohorts`` Thompson winners per query from round-start
+    statistics, advance within-round random+ ranks (``occ``) and derive
+    the per-slot detector keys.  Pure function of the carry — bit-for-bit
+    the choice ``_multi_round`` used to compute inline."""
     c = cohorts
-    b = q_n * c
     keys = jax.vmap(lambda k: jax.random.split(k, 3))(mc.key)
     key_next, k_choice, k_det = keys[:, 0], keys[:, 1], keys[:, 2]
 
@@ -758,6 +760,44 @@ def _multi_round(
         det_keys = k_det[:, None]        # exsample_step uses k_det unsplit
     else:
         det_keys = jax.vmap(lambda k: jax.random.split(k, c))(k_det)
+    return RoundChoice(
+        key_next=key_next, chunk_ids=chunk_ids, ranks=ranks,
+        frame_ids=frame_ids, det_keys=det_keys,
+    )
+
+
+def multi_round_process(
+    mc: ExSampleCarry,
+    cache,
+    chunks: ChunkIndex,
+    active: jax.Array,       # bool[Q] — round-start liveness per query
+    choice: RoundChoice,
+    *,
+    detector: DetectorFn,
+    select: SelectFn | None,
+    query_ids: jax.Array | None = None,   # i32[Q] — global query indices
+):
+    """Process phase of one multi-query round: dedup the union of the Q·C
+    chosen frames, resolve them through the shared ``DetectionCache``, run
+    one detector batch and fold each query's slots sequentially into its
+    own matcher/sampler.  ``query_ids`` carries the GLOBAL query index of
+    each carry row into ``select`` (the async scheduler processes gathered
+    row subsets, whose positional index is not the query id; the resident
+    loop passes ``arange(Q)`` implicitly).
+
+    Returns ``(mc', cache', fresh_calls, cache_hits, aux)`` — see
+    :class:`RoundAux`."""
+    from repro.serve.batcher import cache_insert, cache_lookup, dedup_first_index
+
+    q_n = mc.key.shape[0]
+    c = choice.chunk_ids.shape[1]
+    b = q_n * c
+    if query_ids is None:
+        query_ids = jnp.arange(q_n, dtype=jnp.int32)
+    key_next = choice.key_next
+    chunk_ids, frame_ids, det_keys = (
+        choice.chunk_ids, choice.frame_ids, choice.det_keys
+    )
     det_keys_flat = det_keys.reshape((b,) + det_keys.shape[2:])
     flat_frames = frame_ids.reshape(b)
     flat_valid = jnp.repeat(active, c)
@@ -816,7 +856,7 @@ def _multi_round(
         return jax.lax.fori_loop(0, c, bodyj, (sampler, matcher, results))
 
     sampler, matcher, results = jax.vmap(fold_query)(
-        jnp.arange(q_n, dtype=jnp.int32), mc.sampler, mc.matcher, mc.results,
+        query_ids, mc.sampler, mc.matcher, mc.results,
         dets_q, chunk_ids, frame_ids, active,
     )
     mc = ExSampleCarry(
@@ -827,6 +867,51 @@ def _multi_round(
         key=jnp.where(active[:, None], key_next, mc.key),
         step=mc.step + c * active.astype(jnp.int32),
         results=results,
+    )
+    aux = RoundAux(flat_frames=flat_frames, need=need, fresh=fresh)
+    return mc, cache, fresh_calls, cache_hits, aux
+
+
+def _multi_round(
+    mc: ExSampleCarry,
+    cache,
+    chunks: ChunkIndex,
+    active: jax.Array,       # bool[Q] — round-start liveness per query
+    *,
+    detector: DetectorFn,
+    select: SelectFn | None,
+    cohorts: int,
+    method: str,
+):
+    """One synchronized multi-query round (DESIGN.md §9).
+
+    Every active query draws ``cohorts`` Thompson picks from ITS OWN
+    statistics (one batched ``choose_chunks_batched`` call), the union of
+    the Q·C sampled frames is deduplicated — and filtered through the
+    shared ``DetectionCache`` when enabled — into one detector pass, and
+    the detections scatter back so each query matches/updates against
+    exactly its own cohort's slots.  Per query the fold replicates
+    ``exsample_batch_step`` bit-for-bit: chunk choice from round-start
+    statistics, within-round random+ ranks advancing sequentially
+    (``occ``), matcher folded frame-by-frame, additive sampler deltas.
+
+    Finished queries stay shape-stable: their slots are excluded from the
+    dedup (never detected on their behalf), their detections are masked
+    invalid, their sampler/step/key updates are gated to zero.
+
+    The round is the composition of :func:`multi_round_choose` and
+    :func:`multi_round_process` — the same two halves the async slot
+    scheduler (DESIGN.md §11) runs at issue / process time, so the
+    resident loop and the async workers share one round body.
+
+    Returns ``(mc', cache', fresh_detections i32[], cache_hits i32[])`` —
+    ``fresh_detections`` counts what a real deployment would actually send
+    through the detector this round (unique, uncached, live frames); the
+    simulator still evaluates the full padded batch for static shapes.
+    """
+    choice = multi_round_choose(mc, chunks, cohorts=cohorts, method=method)
+    mc, cache, fresh_calls, cache_hits, _aux = multi_round_process(
+        mc, cache, chunks, active, choice, detector=detector, select=select,
     )
     return mc, cache, fresh_calls, cache_hits
 

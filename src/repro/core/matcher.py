@@ -245,6 +245,78 @@ def merge_matcher_checked(
     return merge_matcher(dst, src, snap), merge_stats(dst, src, snap)
 
 
+def eviction_mask(dst: MatcherState, n_new) -> jax.Array:
+    """bool[R] — the live ``dst`` entries that appending ``n_new`` fresh
+    insertions at ``dst.cursor`` will overwrite (the ring-spill contract,
+    DESIGN.md §11).
+
+    This is the append window ``[dst.cursor, dst.cursor + n_new) mod R``
+    restricted to occupied slots — exactly the entries
+    ``merge_stats.clobbered`` counts.  Callers extract them to a host-side
+    :class:`ResultLog` *before* the merge/replacement lands, so a fixed
+    device ring supports unbounded result sets with zero loss (as long as
+    a single merge window inserts fewer than ``R`` entries; beyond that
+    the source ring itself wrapped and the entries are unrecoverable —
+    ``MergeStats.overflow``)."""
+    cap = dst.capacity
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    window = (idx - dst.cursor) % cap < jnp.minimum(n_new, cap)
+    return window & (dst.times_seen > 0)
+
+
+class ResultLog:
+    """Append-only host-side log of results evicted from a device ring.
+
+    The matcher ring is a *recent window*; entries pushed out by new
+    insertions drain here at merge boundaries (``spill``), so the total
+    distinct-result set of a long search is ``ring live entries +
+    len(log)`` with nothing dropped.  Host-side numpy on purpose: spills
+    happen on the driver thread between device calls, and the log never
+    re-enters jit."""
+
+    _FIELDS = ("boxes", "feats", "video", "frame", "chunk", "times_seen")
+
+    def __init__(self):
+        self._chunks: list[dict] = []
+        self.count = 0
+
+    def __len__(self) -> int:
+        return self.count
+
+    def spill(self, matcher: MatcherState, mask) -> int:
+        """Append ``matcher``'s entries selected by ``mask`` (bool[R]);
+        returns how many were spilled."""
+        import numpy as np
+
+        mask_np = np.asarray(mask)
+        k = int(mask_np.sum())
+        if k:
+            self._chunks.append({
+                f: np.asarray(getattr(matcher, f))[mask_np]
+                for f in self._FIELDS
+            })
+            self.count += k
+        return k
+
+    def as_arrays(self) -> dict:
+        """The whole log as one dict of concatenated numpy arrays."""
+        import numpy as np
+
+        if not self._chunks:
+            return {
+                "boxes": np.zeros((0, 4), np.float32),
+                "feats": np.zeros((0, 0), np.float32),
+                "video": np.zeros((0,), np.int32),
+                "frame": np.zeros((0,), np.int32),
+                "chunk": np.zeros((0,), np.int32),
+                "times_seen": np.zeros((0,), np.int32),
+            }
+        return {
+            f: np.concatenate([c[f] for c in self._chunks])
+            for f in self._FIELDS
+        }
+
+
 @jax.jit
 def merge_matcher(
     dst: MatcherState, src: MatcherState, snap: MatcherState

@@ -69,9 +69,11 @@ class Execution:
       is used even at Q=1.  Implied by ``SearchPlan.queries > 1``.
     * ``sync_every`` — rounds between sampler/matcher merges on the mesh
       paths (eventual-consistency Thompson, §8).
-    * ``async_workers`` — ``> 0`` lowers to the threaded
-      :class:`~repro.core.runtime.AsyncSearchDriver`; cannot combine with
-      mesh sharding or the Q axis.
+    * ``async_workers`` — ``> 0`` lowers to the threaded async runtime:
+      the single-query :class:`~repro.core.runtime.AsyncSearchDriver`, or
+      — composed with the Q axis — the slot-based
+      :class:`~repro.core.runtime.AsyncMultiSearchDriver` (DESIGN.md
+      §11).  Cannot combine with mesh sharding.
     * ``cache`` — :class:`~repro.serve.batcher.DetectionCache` capacity:
       ``None`` disables, ``-1`` sizes it to the repository at run time,
       positive values trade memory for evictions.  Requires the Q-axis
@@ -136,9 +138,10 @@ class SearchPlan:
 
     def resolve(self) -> tuple[str, str]:
         """Validate and return ``(kind, method)``: the lowering target (one
-        of ``host | scan | async | sharded | multi | multi_sharded``) and
-        the resolved Thompson method.  Raises typed :class:`PlanError`\\ s
-        with actionable messages on invalid or incompatible options."""
+        of ``host | scan | async | sharded | multi | multi_sharded |
+        async_multi``) and the resolved Thompson method.  Raises typed
+        :class:`PlanError`\\ s with actionable messages on invalid or
+        incompatible options."""
         ex = self.execution
 
         # -- per-option value checks ---------------------------------------
@@ -205,11 +208,12 @@ class SearchPlan:
         # -- cross-option compatibility ------------------------------------
         multi = ex.queries_axis or self.queries > 1
         sharded = ex.shards > 1 or ex.strategy == "sharded"
-        if self.queries > 1 and ex.strategy in ("host", "scan", "async"):
+        if self.queries > 1 and ex.strategy in ("host", "scan"):
             raise PlanCompatibilityError(
                 f"queries={self.queries} needs the Q-axis drivers; "
                 f"strategy={ex.strategy!r} is single-query — use "
-                "strategy='auto' (or 'sharded' to compose with a mesh)",
+                "strategy='auto' (or 'sharded' to compose with a mesh, "
+                "or 'async' for the slot scheduler)",
                 field="strategy")
         if ex.cache is not None and not multi:
             raise PlanCompatibilityError(
@@ -226,16 +230,13 @@ class SearchPlan:
                     "strategies — pick one (shards>1 already runs "
                     "barrier-free via the §8 merge schedule)",
                     field="async_workers")
-            if multi:
+            if self.trace_every > 0 and not multi:
                 raise PlanCompatibilityError(
-                    "async_workers>0 with a queries axis is not lowerable: "
-                    "the async driver owns a single-query carry — run one "
-                    "plan per query or drop async_workers",
-                    field="async_workers")
-            if self.trace_every > 0:
-                raise PlanCompatibilityError(
-                    "async_workers>0 records no recall trace (merges land "
-                    "out of order); set trace_every=0",
+                    "async_workers>0 on a single-query carry records no "
+                    "recall trace (merges land out of order); set "
+                    "trace_every=0, or compose with queries_axis=True — "
+                    "the slot scheduler serializes per-query rounds so "
+                    "per-query traces are exact (DESIGN.md §11)",
                     field="trace_every")
             if ex.strategy not in ("auto", "async"):
                 raise PlanCompatibilityError(
@@ -279,7 +280,7 @@ class SearchPlan:
 
         # -- lowering kind (DESIGN.md §10 table) ---------------------------
         if ex.async_workers > 0 or ex.strategy == "async":
-            kind = "async"
+            kind = "async_multi" if multi else "async"
         elif ex.strategy == "host":
             kind = "host"
         elif sharded and multi:
@@ -291,7 +292,9 @@ class SearchPlan:
         else:
             kind = "scan"
 
-        if kind == "async" and self.method not in ("auto", "exact"):
+        if kind in ("async", "async_multi") and self.method not in (
+            "auto", "exact"
+        ):
             raise PlanCompatibilityError(
                 f"method={self.method!r} on the async lowering: cohort "
                 "issue uses the exact Gamma sampler — use method='auto'",

@@ -2,18 +2,38 @@
 
 The paper sketches asynchronous distributed execution (§3.7.1: "workers
 processing a batch of frames at a time without waiting for other workers…
-all updates are commutative").  This module is that sketch made concrete:
+all updates are commutative").  This module is that sketch made concrete,
+at two tiers:
 
-  * a driver owns the sampler/matcher state and a cohort queue;
-  * N workers pull cohorts and process each one as a SINGLE scanned
-    device call (``_process_cohort``: a ``lax.fori_loop`` over the
-    cohort's frames — one dispatch per cohort, not per frame), then push
-    delta statistics back whenever they finish — no barriers;
-  * the driver merges deltas commutatively (`merge_deltas`), re-samples
-    new cohorts from the freshest state, monitors worker health
-    (`HeartbeatMonitor`) and re-issues cohorts from dead/straggling
-    workers (at-most-once *effect*: a duplicated frame perturbs one
-    sample, which the estimator tolerates — DESIGN.md §5).
+  * :class:`AsyncSearchDriver` — the legacy single-query tier: a driver
+    owns the sampler/matcher state and a cohort queue; N workers pull
+    whole-carry cohorts, process each as a SINGLE scanned device call
+    (``_process_cohort``), and push delta statistics back whenever they
+    finish — no barriers.  The driver merges deltas commutatively
+    (`merge_deltas`), re-samples new cohorts from the freshest state,
+    monitors worker health (`HeartbeatMonitor`) and re-issues cohorts
+    from dead/straggling workers (at-most-once *effect*: a duplicated
+    frame perturbs one sample, which the estimator tolerates —
+    DESIGN.md §5).
+
+  * :class:`AsyncMultiSearchDriver` — the slot-based elastic scheduler
+    over a leading-``[Q]`` carry (DESIGN.md §11): workers check out
+    per-query *cohort slots* (query id, chunk winners, rank base, key
+    split — a precomputed :class:`~repro.core.exsample.RoundChoice`)
+    instead of whole carries, process whichever slots are in flight
+    through ONE shared dedup + :class:`DetectionCache` detector batch
+    (``multi_round_process``), and the driver applies each query's delta
+    back into its row under the pending-set/at-most-once discipline.  At
+    most one slot per query is in flight, so per-query rounds serialize
+    and every query's trajectory is bit-identical to its solo
+    ``run_search_scan`` run at ANY worker count (deterministic detector).
+    Finished queries retire their slots; new queries join mid-flight
+    (``admit``) via the same finished-query masking machinery.
+
+Both tiers spill matcher-ring evictions to an append-only host-side
+:class:`~repro.core.matcher.ResultLog` at merge boundaries, so result
+sets are unbounded while the device ring stays fixed (the ring-spill
+contract, DESIGN.md §11).
 
 The runtime is deterministic under a virtual clock for testing; the
 worker pool is threads (the detector releases the GIL under jax) — on a
@@ -22,11 +42,12 @@ real deployment each worker is a pod client.
 from __future__ import annotations
 
 import dataclasses
+import math
 import queue
 import threading
 import time
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,18 +55,37 @@ import numpy as np
 
 from repro.core.chunks import ChunkIndex
 from repro.core.distributed import merge_deltas
-from repro.core.exsample import ExSampleCarry, _process_frame
-from repro.core.matcher import MatcherState, merge_matcher_checked
+from repro.core.exsample import (
+    ExSampleCarry,
+    RoundAux,
+    RoundChoice,
+    SelectFn,
+    _process_frame,
+    multi_round_choose,
+    multi_round_process,
+    stack_carries,
+)
+from repro.core.matcher import (
+    MatcherState,
+    ResultLog,
+    eviction_mask,
+    merge_matcher_checked,
+)
 from repro.core.thompson import choose_chunks
 from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.serve.batcher import cache_insert, init_detection_cache
 
 
 class MatcherRingOverflow(RuntimeError):
     """A worker inserted ≥ capacity results between snapshot and merge: the
-    ring wrapped, entries are unrecoverable, and a silent merge would
-    under-count.  Raised instead of wrapping (ROADMAP ring-wrap guard);
-    deployments should size ``max_results`` ≫ cohort result rates or merge
-    more often."""
+    SOURCE ring wrapped, entries were overwritten before they could be
+    seen, and no spill can recover them.  Raised instead of silently
+    under-counting (ROADMAP ring-wrap guard).  Evictions on the
+    *destination* side are recoverable and spill to the host
+    :class:`~repro.core.matcher.ResultLog` instead (DESIGN.md §11);
+    deployments hitting this error should size ``max_results`` above the
+    per-merge insertion bound (cohort size × detections per frame) or
+    merge more often."""
 
 
 @partial(jax.jit, static_argnames=("detector",))
@@ -117,9 +157,12 @@ class AsyncSearchDriver:
         self._next_cohort = 0
         self._inflight: dict[int, Cohort] = {}
         self.num_workers = num_workers
+        self.result_log = ResultLog()
+        # every counter exists from construction so LoweredPlan.run() can
+        # package uniform SearchStats even for a run that never merged
         self.stats = {
             "cohorts": 0, "reissues": 0, "merges": 0, "duplicate_drops": 0,
-            "merge_high_water": 0,
+            "merge_high_water": 0, "spilled": 0,
         }
 
     # ---- driver side -------------------------------------------------------
@@ -153,11 +196,13 @@ class AsyncSearchDriver:
         the lock, any later completion of the same cohort is dropped (and
         counted in ``stats["duplicate_drops"]``).
 
-        Ring-wrap guard (ROADMAP): the per-merge insertion count is
-        surfaced as ``stats["merge_high_water"]`` and a merge whose
-        insertions reached the ring capacity raises
-        ``MatcherRingOverflow`` instead of silently aliasing the append
-        window."""
+        Ring-spill contract (DESIGN.md §11): live destination entries the
+        append window overwrites drain to ``self.result_log`` BEFORE the
+        merge lands, so eviction loses nothing.  Only a SOURCE-ring wrap
+        (``mstats.overflow``: ≥ capacity insertions between snapshot and
+        merge, unrecoverable by construction) still raises
+        ``MatcherRingOverflow``; the per-merge insertion count is
+        surfaced as ``stats["merge_high_water"]``."""
         with self._lock:
             if res.cohort_id not in self._inflight:
                 self.stats["duplicate_drops"] += 1
@@ -166,18 +211,26 @@ class AsyncSearchDriver:
             sampler = merge_deltas(self.carry.sampler, res.delta_n1, res.delta_n)
             matcher = self.carry.matcher
             if res.matcher is not None:
-                matcher, mstats = merge_matcher_checked(
-                    matcher, res.matcher, res.snap_matcher
+                inserted = int(
+                    res.matcher.total_inserted - res.snap_matcher.total_inserted
                 )
                 self.stats["merge_high_water"] = max(
-                    self.stats["merge_high_water"], int(mstats.inserted)
+                    self.stats["merge_high_water"], inserted
                 )
-                if bool(mstats.overflow):
+                if inserted >= matcher.capacity:
                     raise MatcherRingOverflow(
-                        f"cohort {res.cohort_id}: {int(mstats.inserted)} "
-                        f"insertions into a capacity-"
-                        f"{matcher.capacity} result ring"
+                        f"cohort {res.cohort_id}: {inserted} insertions "
+                        f"into a capacity-{matcher.capacity} result ring "
+                        "wrapped the source ring (unrecoverable) — size "
+                        "max_results above the per-cohort insertion bound"
                     )
+                if inserted:
+                    self.stats["spilled"] += self.result_log.spill(
+                        matcher, eviction_mask(matcher, inserted)
+                    )
+                matcher, _mstats = merge_matcher_checked(
+                    matcher, res.matcher, res.snap_matcher
+                )
             self.carry = dataclasses.replace(
                 self.carry,
                 sampler=sampler,
@@ -281,3 +334,494 @@ class AsyncSearchDriver:
             for t in threads:
                 t.join(timeout=5.0)
         return self.carry
+
+
+# ---------------------------------------------------------------------------
+# Slot-based elastic scheduler over a leading-[Q] carry (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cohorts", "method"))
+def _issue_slots(
+    sub: ExSampleCarry,
+    chunks: ChunkIndex,
+    *,
+    cohorts: int,
+    method: str,
+) -> RoundChoice:
+    """Choose phase for a gathered batch of query rows — the content of a
+    cohort slot: chunk winners, random+ rank base, per-slot key split."""
+    return multi_round_choose(sub, chunks, cohorts=cohorts, method=method)
+
+
+@partial(jax.jit, static_argnames=("detector", "select"))
+def _process_slots(
+    sub: ExSampleCarry,
+    cache,
+    chunks: ChunkIndex,
+    query_ids: jax.Array,
+    active: jax.Array,
+    choice: RoundChoice,
+    *,
+    detector: Callable,
+    select: Optional[SelectFn],
+):
+    """Process phase for whichever slots are in flight: ONE shared dedup +
+    ``DetectionCache`` detector batch for the gathered rows, then each
+    query's sequential matcher/sampler fold.  Identical round body to the
+    resident ``_search_multi_device`` loop (``multi_round_process``), so
+    per-lane results are bit-identical to the solo drivers."""
+    return multi_round_process(
+        sub, cache, chunks, active, choice,
+        detector=detector, select=select, query_ids=query_ids,
+    )
+
+
+@dataclasses.dataclass
+class SlotBatch:
+    """A checked-out set of per-query cohort slots (at most one per query).
+
+    ``carry`` holds the gathered rows at issue time — authoritative, since
+    a query has at most one slot in flight — and ``choice`` is the
+    precomputed choose phase, so a re-issued straggler batch reprocesses
+    the IDENTICAL work item."""
+
+    batch_id: int
+    query_rows: np.ndarray      # i32[B] — driver row index per lane
+    carry: ExSampleCarry        # gathered rows, leading [B]
+    choice: RoundChoice         # leading [B]
+    active: np.ndarray          # bool[B] — False = padding lane
+    issue_count: int = 0        # >1 ⇒ re-issued (straggler/death)
+
+
+@dataclasses.dataclass
+class SlotResult:
+    batch_id: int
+    worker_id: int
+    carry: ExSampleCarry        # post-round rows, leading [B]
+    fresh_calls: int            # unique, uncached frames detected
+    cache_hits: int
+    aux: RoundAux               # fresh detections for cache publication
+
+
+@dataclasses.dataclass
+class _QueryRow:
+    """One query's slot in the elastic pool."""
+
+    carry: ExSampleCarry        # single-query carry (scalar step/results)
+    limit: int                  # distinct-result target
+    budget: int                 # frame budget (max steps for THIS query)
+    trace: list
+    log: ResultLog
+    active: bool = True         # False = retired (finished or failed)
+    inflight: bool = False      # a slot for this query is checked out
+    rounds: int = 0             # rounds merged so far
+
+
+class AsyncMultiSearchDriver:
+    """Elastic slot scheduler: async workers × a leading-[Q] carry.
+
+    The driver owns Q query rows (sampler, matcher, key, counters — one
+    lane of the §9 multi-query carry each).  ``_issue_ready`` checks out a
+    *cohort slot* per issuable query — the precomputed
+    :class:`~repro.core.exsample.RoundChoice` (chunk winners, rank base,
+    key split) plus the row snapshot — and packs up to ``slots_per_batch``
+    slots into one :class:`SlotBatch` work item.  Workers run the shared
+    dedup + cache + detector batch (``_process_slots``) for whichever
+    slots are in flight; ``_merge`` applies each query's post-round row
+    back under the pending-set/at-most-once discipline, publishes fresh
+    detections into the shared :class:`DetectionCache`, spills
+    ring-evicted results to the per-query host
+    :class:`~repro.core.matcher.ResultLog` and re-issues freed queries.
+
+    Scheduling invariant: AT MOST ONE slot per query in flight — round
+    r+1 of a query is only chosen after round r merged.  Per-query rounds
+    therefore serialize, and with a deterministic detector each query's
+    (step, results, trace, sampler, key) trajectory is bit-identical to
+    its solo ``run_search_scan`` run at ANY worker count: concurrency
+    comes from different queries' rounds overlapping, amortization from
+    the shared per-batch dedup and the cross-round cache (which change
+    WHICH detector invocations happen, never the values a query
+    consumes).  Sampler deltas never cross queries and each row is
+    replaced wholesale by its own serialized round, so Q-axis merges
+    commute trivially (DESIGN.md §11 vs the §8/§9 argument for shared
+    state).
+
+    Elasticity: a finished query retires its row (masked out of issue,
+    shape-stable); ``admit()`` installs a fresh query mid-flight with a
+    frame budget debited by the pool rounds it missed.  Batch shapes are
+    fixed at ``slots_per_batch`` (padded with inactive lanes), so neither
+    retirement nor admission recompiles anything.
+
+    The composed path cannot raise :class:`MatcherRingOverflow`: the
+    constructor rejects configurations whose per-round insertion bound
+    (cohorts × detector slots per frame) reaches the ring capacity, which
+    is the only way a source ring can wrap between issue and merge.
+    """
+
+    def __init__(
+        self,
+        carries: ExSampleCarry,
+        chunks: ChunkIndex,
+        detector: Callable,
+        *,
+        cohorts: int = 1,
+        num_workers: int = 4,
+        result_limits: Union[int, Sequence[int]] = 50,
+        max_steps: int = 100_000,
+        method: str = "exact",
+        select: Optional[SelectFn] = None,
+        cache_frames: int = 0,
+        trace_every: int = 0,
+        slots_per_batch: Optional[int] = None,
+        straggler_factor: float = 4.0,
+    ):
+        if jnp.ndim(carries.step) != 1:
+            raise ValueError(
+                "AsyncMultiSearchDriver needs a leading-[Q] carry "
+                "(init_carry_multi / stack_carries); got a single-query "
+                "carry"
+            )
+        q_n = int(carries.step.shape[0])
+        if isinstance(result_limits, (int, np.integer)):
+            limits = [int(result_limits)] * q_n
+        else:
+            limits = [int(v) for v in np.asarray(result_limits).reshape(-1)]
+            if len(limits) != q_n:
+                raise ValueError(
+                    f"result_limits has {len(limits)} entries for a "
+                    f"{q_n}-query carry"
+                )
+        self.chunks = chunks
+        self.detector = detector
+        self.select = select
+        self.cohorts = cohorts
+        self.method = method
+        self.max_steps = max_steps
+        self.trace_every = trace_every
+        self.num_workers = num_workers
+        self.slots_per_batch = (
+            max(1, math.ceil(q_n / max(num_workers, 1)))
+            if slots_per_batch is None
+            else max(1, slots_per_batch)
+        )
+        self.monitor = HeartbeatMonitor(straggler_factor=straggler_factor)
+        self._lock = threading.Lock()
+        self._work: "queue.Queue[Optional[SlotBatch]]" = queue.Queue()
+        self._results: "queue.Queue[SlotResult]" = queue.Queue()
+        self._next_batch = 0
+        self._inflight: dict[int, SlotBatch] = {}
+        self.rows = [
+            _QueryRow(
+                carry=jax.tree.map(lambda x, q=q: x[q], carries),
+                limit=limits[q],
+                budget=max_steps,
+                trace=[],
+                log=ResultLog(),
+            )
+            for q in range(q_n)
+        ]
+        # no-overflow guarantee for the composed path: a round inserts at
+        # most cohorts × (detector slots per frame) entries per query, and
+        # a merge window is exactly one round — keep it under capacity so
+        # the source ring can never wrap (MatcherRingOverflow-free)
+        struct = jax.eval_shape(
+            detector, jax.random.PRNGKey(0), jnp.zeros((), jnp.int32)
+        )
+        det_slots = (
+            int(struct.valid.shape[-1]) if hasattr(struct, "valid") else None
+        )
+        capacity = int(carries.matcher.times_seen.shape[-1])
+        if det_slots is not None and cohorts * det_slots >= capacity:
+            raise ValueError(
+                f"matcher capacity {capacity} does not cover one round's "
+                f"insertion bound (cohorts={cohorts} × {det_slots} detector "
+                "slots per frame): the ring could wrap inside a merge "
+                "window, which no spill can recover — raise max_results or "
+                "lower cohorts"
+            )
+        if cache_frames:
+            self.cache = init_detection_cache(struct, cache_frames)
+        else:
+            self.cache = None
+        # every counter exists from construction so LoweredPlan.run() can
+        # package uniform SearchStats even for a run that never merged
+        self.stats = {
+            "slots": 0, "merges": 0, "reissues": 0, "duplicate_drops": 0,
+            "merge_high_water": 0, "rounds": 0, "spilled": 0,
+            "detector_invocations": 0, "cache_hits": 0,
+        }
+
+    # ---- row liveness / elasticity ----------------------------------------
+
+    def _row_live(self, row: _QueryRow) -> bool:
+        """The solo driver's continue condition, per row (checked before
+        each round, exactly like ``_search_scan_device``'s ``cond``)."""
+        return (
+            int(row.carry.results) < row.limit
+            and int(row.carry.step) < row.budget
+            and not bool(jnp.all(row.carry.sampler.exhausted()))
+        )
+
+    def _retire(self, row: _QueryRow) -> None:
+        """Mask a finished query out of issue and close its trace with the
+        unconditional final checkpoint (``run_search_scan`` semantics)."""
+        row.active = False
+        row.trace.append((int(row.carry.step), int(row.carry.results)))
+
+    def pool_rounds(self) -> int:
+        """Pool progress clock: rounds completed by the furthest-ahead
+        query.  ``admit`` debits a late joiner's default frame budget by
+        ``cohorts × pool_rounds()`` — the frames it missed."""
+        return max((r.rounds for r in self.rows), default=0)
+
+    def admit(
+        self,
+        key: jax.Array,
+        *,
+        result_limit: int,
+        max_steps: Optional[int] = None,
+    ) -> int:
+        """Join a fresh query mid-flight; returns its row index.
+
+        The new row starts from zeroed sampler statistics and an empty
+        matcher (same geometry/thresholds as the pool) and is issuable
+        from the next ``_issue_ready`` call.  Its frame budget defaults to
+        ``driver.max_steps − cohorts × pool_rounds()`` — a query admitted
+        at round r behaves exactly like one present from round 0 whose
+        budget was reduced by the frames it missed (the join/retire
+        property, tests/test_async_compose.py)."""
+        proto = self.rows[0].carry
+        m0 = proto.matcher
+        fresh_matcher = dataclasses.replace(
+            m0,
+            boxes=jnp.zeros_like(m0.boxes),
+            feats=jnp.zeros_like(m0.feats),
+            video=jnp.full_like(m0.video, -1),
+            frame=jnp.full_like(m0.frame, -(10**9)),
+            chunk=jnp.full_like(m0.chunk, -1),
+            times_seen=jnp.zeros_like(m0.times_seen),
+            cursor=jnp.zeros((), jnp.int32),
+            total_inserted=jnp.zeros((), jnp.int32),
+        )
+        s0 = proto.sampler
+        fresh_sampler = dataclasses.replace(
+            s0, n1=jnp.zeros_like(s0.n1), n=jnp.zeros_like(s0.n)
+        )
+        carry = ExSampleCarry(
+            sampler=fresh_sampler,
+            matcher=fresh_matcher,
+            key=key,
+            step=jnp.zeros((), jnp.int32),
+            results=jnp.zeros((), jnp.int32),
+        )
+        with self._lock:
+            budget = (
+                max(0, self.max_steps - self.cohorts * self.pool_rounds())
+                if max_steps is None
+                else max_steps
+            )
+            row = _QueryRow(
+                carry=carry, limit=int(result_limit), budget=budget,
+                trace=[], log=ResultLog(),
+            )
+            self.rows.append(row)
+            return len(self.rows) - 1
+
+    # ---- driver side -------------------------------------------------------
+
+    def _issue_ready(self) -> list:
+        """Check out a cohort slot for every issuable query (active, live,
+        no slot in flight), packed into fixed-shape batches.  Queries that
+        are no longer live retire here instead of issuing."""
+        with self._lock:
+            issuable = []
+            for i, row in enumerate(self.rows):
+                if not row.active or row.inflight:
+                    continue
+                if not self._row_live(row):
+                    self._retire(row)
+                    continue
+                issuable.append(i)
+            batches = []
+            bsz = self.slots_per_batch
+            for g in range(0, len(issuable), bsz):
+                group = issuable[g:g + bsz]
+                pad = bsz - len(group)
+                lanes = group + [group[0]] * pad
+                active = np.asarray([True] * len(group) + [False] * pad)
+                sub = stack_carries([self.rows[i].carry for i in lanes])
+                choice = _issue_slots(
+                    sub, self.chunks, cohorts=self.cohorts, method=self.method
+                )
+                batch = SlotBatch(
+                    batch_id=self._next_batch,
+                    query_rows=np.asarray(lanes, np.int32),
+                    carry=sub,
+                    choice=choice,
+                    active=active,
+                )
+                self._next_batch += 1
+                for i in group:
+                    self.rows[i].inflight = True
+                self._inflight[batch.batch_id] = batch
+                self.stats["slots"] += 1
+                batches.append(batch)
+        for batch in batches:
+            self._work.put(batch)
+        return batches
+
+    def _merge(self, res: SlotResult) -> None:
+        """Apply one slot batch back into the Q-axis rows — at most once.
+
+        The pending set is ``self._inflight``: the first completion of a
+        batch removes it under the lock, any later completion (straggler
+        re-issue) is dropped and counted.  Fresh detections publish into
+        the shared cache (first-write-wins; a concurrent worker detecting
+        the same frame re-inserts identical values under a deterministic
+        detector), then every active lane's row is REPLACED by its
+        post-round state — sound because that lane's rounds are
+        serialized, so the worker's output is the row's unique successor.
+        Live ring entries the round evicted spill to the row's host
+        ``ResultLog`` before the replacement lands."""
+        with self._lock:
+            batch = self._inflight.pop(res.batch_id, None)
+            if batch is None:
+                self.stats["duplicate_drops"] += 1
+                return
+            if self.cache is not None:
+                self.cache = cache_insert(
+                    self.cache, res.aux.flat_frames, res.aux.fresh,
+                    res.aux.need,
+                )
+            self.stats["detector_invocations"] += res.fresh_calls
+            self.stats["cache_hits"] += res.cache_hits
+            self.stats["merges"] += 1
+            self.stats["rounds"] += 1
+            for lane, qrow in enumerate(batch.query_rows):
+                if not batch.active[lane]:
+                    continue
+                row = self.rows[int(qrow)]
+                new_carry = jax.tree.map(
+                    lambda x, lane=lane: x[lane], res.carry
+                )
+                inserted = int(
+                    new_carry.matcher.total_inserted
+                    - row.carry.matcher.total_inserted
+                )
+                self.stats["merge_high_water"] = max(
+                    self.stats["merge_high_water"], inserted
+                )
+                if inserted:
+                    self.stats["spilled"] += row.log.spill(
+                        row.carry.matcher,
+                        eviction_mask(row.carry.matcher, inserted),
+                    )
+                if self.trace_every:
+                    s0, s1 = int(row.carry.step), int(new_carry.step)
+                    if (s1 // self.trace_every) > (s0 // self.trace_every):
+                        row.trace.append((s1, int(new_carry.results)))
+                row.carry = new_carry
+                row.rounds += 1
+                row.inflight = False
+                if not self._row_live(row):
+                    self._retire(row)
+
+    def _reissue(self, batch_id: int) -> None:
+        with self._lock:
+            batch = self._inflight.get(batch_id)
+            if batch is None:
+                return
+            batch.issue_count += 1
+            self.stats["reissues"] += 1
+        self._work.put(batch)
+
+    # ---- worker side -------------------------------------------------------
+
+    def _process_batch(self, wid: int, batch: SlotBatch) -> SlotResult:
+        """Run the shared dedup + cache + detector round for the slots in
+        flight.  Pure of scheduling concerns (tests drive duplicate
+        completions synchronously); reads only the batch's own row
+        snapshots plus a cache snapshot — never the live rows, which may
+        be mid-merge on another thread."""
+        with self._lock:
+            cache = self.cache
+        qids = jnp.asarray(batch.query_rows, jnp.int32)
+        active = jnp.asarray(batch.active)
+        out, _cache, fresh_calls, cache_hits, aux = _process_slots(
+            batch.carry, cache, self.chunks, qids, active, batch.choice,
+            detector=self.detector, select=self.select,
+        )
+        return SlotResult(
+            batch_id=batch.batch_id,
+            worker_id=wid,
+            carry=out,
+            fresh_calls=int(fresh_calls),
+            cache_hits=int(cache_hits),
+            aux=aux,
+        )
+
+    def _worker(self, wid: int) -> None:
+        self.monitor.register(wid, now=time.monotonic())
+        while True:
+            batch = self._work.get()
+            if batch is None:
+                return
+            self.monitor.assign(wid, batch.batch_id)
+            t0 = time.monotonic()
+            self._results.put(self._process_batch(wid, batch))
+            now = time.monotonic()
+            self.monitor.heartbeat(wid, now)
+            self.monitor.record_completion(wid, now - t0)
+
+    # ---- run loop ----------------------------------------------------------
+
+    def run(self) -> ExSampleCarry:
+        """Drive every query to completion; returns the stacked [Q] carry
+        (retired rows keep their final state).  Per-query traces are in
+        ``self.traces``, spilled results in ``self.logs``."""
+        threads = [
+            threading.Thread(target=self._worker, args=(w,), daemon=True)
+            for w in range(self.num_workers)
+        ]
+        for t in threads:
+            t.start()
+        try:
+            self._issue_ready()
+            while True:
+                with self._lock:
+                    done = not self._inflight and not any(
+                        r.active for r in self.rows
+                    )
+                if done:
+                    break
+                try:
+                    res = self._results.get(timeout=60.0)
+                except queue.Empty:
+                    break
+                self._merge(res)
+                actions = self.monitor.sweep(time.monotonic())
+                for bid in actions["reissue_cohorts"]:
+                    self._reissue(bid)
+                self._issue_ready()
+        finally:
+            for _ in threads:
+                self._work.put(None)
+            for t in threads:
+                t.join(timeout=5.0)
+        # rows still active (abnormal exit) close their trace like the
+        # scan driver's unconditional final checkpoint
+        for row in self.rows:
+            if row.active and not row.inflight:
+                row.trace.append(
+                    (int(row.carry.step), int(row.carry.results))
+                )
+        return stack_carries([row.carry for row in self.rows])
+
+    @property
+    def traces(self) -> list:
+        return [row.trace for row in self.rows]
+
+    @property
+    def logs(self) -> list:
+        return [row.log for row in self.rows]

@@ -131,6 +131,8 @@ def _print_result(res, args, wall: float) -> None:
     if st.merges:
         print(f"  merges: {st.merges} windows, ring high-water "
               f"{st.merge_high_water}/{st.matcher_capacity}"
+              + (f", {st.results_spilled} results spilled to host log"
+                 if st.results_spilled else "")
               + (" OVERFLOW" if st.merge_overflow else ""))
 
 
@@ -194,7 +196,7 @@ def main() -> None:
           f"{json.dumps(plan.to_dict())}")
 
     q_n = plan.queries
-    multi = lowered.kind in ("multi", "multi_sharded")
+    multi = lowered.kind in ("multi", "multi_sharded", "async_multi")
     select = None
     if multi:
         classes = args.queries if args.queries else list(range(q_n))

@@ -1,0 +1,337 @@
+"""Elastic slot scheduler: async workers × Q-axis carry (DESIGN.md §11).
+
+The acceptance bar mirrors the solo drivers': with a deterministic
+detector every query's (step, results, trace, sampler statistics, key)
+trajectory through :class:`AsyncMultiSearchDriver` is bit-identical to
+its own ``run_search_scan`` run at ANY worker count — per-query rounds
+serialize (at most one slot in flight per query), so concurrency only
+overlaps DIFFERENT queries' rounds.  Property tests pin the elastic
+join/retire semantics (a query admitted at round r ≡ a solo run whose
+frame budget was debited the frames it missed), the at-most-once merge
+discipline under forced straggler re-issue, and the ring-spill contract:
+a tiny device ring never raises ``MatcherRingOverflow`` on the composed
+path and never loses a result — evicted entries land in the per-query
+host ``ResultLog``.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AsyncMultiSearchDriver,
+    init_carry,
+    init_carry_multi,
+    init_matcher,
+    init_state,
+    run_search_scan,
+    stack_carries,
+)
+from repro.core.plan import Execution, SearchPlan
+from repro.sim import RepoSpec, generate
+from repro.sim.oracle import oracle_detect
+
+warnings.filterwarnings("ignore", message="run_search_scan")
+
+
+@pytest.fixture(scope="module")
+def world():
+    spec = RepoSpec(
+        video_lengths=[6_000] * 3, num_instances=120, chunk_frames=600,
+        locality=4.0, seed=7,
+    )
+    repo, chunks = generate(spec)
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    return repo, chunks, det
+
+
+def _qkey(q):
+    return jax.random.fold_in(jax.random.PRNGKey(0), q)
+
+
+def _fresh_multi(chunks, q_n, max_results=64):
+    keys = jax.vmap(_qkey)(jnp.arange(q_n))
+    return init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=max_results), keys
+    )
+
+
+def _solo(chunks, det, q, *, result_limit, max_steps, cohorts=1,
+          trace_every=0, max_results=64):
+    carry = init_carry(
+        init_state(chunks.length), init_matcher(max_results=max_results),
+        _qkey(q),
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return run_search_scan(
+            carry, chunks, detector=det, result_limit=result_limit,
+            max_steps=max_steps, cohorts=cohorts, trace_every=trace_every,
+        )
+
+
+def _assert_row_equals_solo(out, trace, q, solo_out, solo_trace):
+    assert int(out.step[q]) == int(solo_out.step)
+    assert int(out.results[q]) == int(solo_out.results)
+    assert bool(jnp.all(out.key[q] == solo_out.key))
+    np.testing.assert_array_equal(out.sampler.n[q], solo_out.sampler.n)
+    np.testing.assert_array_equal(out.sampler.n1[q], solo_out.sampler.n1)
+    np.testing.assert_array_equal(
+        out.matcher.times_seen[q], solo_out.matcher.times_seen
+    )
+    assert trace == solo_trace
+
+
+# ---------------------------------------------------------------------------
+# Bit-parity vs solo run_search_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_composed_bit_parity_vs_solo_scan(world, workers):
+    """Each query through the slot scheduler ≡ its solo scanned run —
+    at ANY worker count, since per-query rounds serialize."""
+    _, chunks, det = world
+    q_n = 3
+    driver = AsyncMultiSearchDriver(
+        _fresh_multi(chunks, q_n), chunks, det,
+        cohorts=2, num_workers=workers, result_limits=8,
+        max_steps=1500, trace_every=25,
+    )
+    out = driver.run()
+    for q in range(q_n):
+        solo_out, solo_trace = _solo(
+            chunks, det, q, result_limit=8, max_steps=1500, cohorts=2,
+            trace_every=25,
+        )
+        _assert_row_equals_solo(out, driver.traces[q], q, solo_out,
+                                solo_trace)
+
+
+def test_composed_parity_through_search_plan(world):
+    """The async_multi lowering (async_workers>0 × queries>1) reaches the
+    same per-query fixed points through the declarative SearchPlan, with
+    uniform SearchStats populated."""
+    _, chunks, det = world
+    q_n = 4
+    plan = SearchPlan(
+        queries=q_n, cohorts=2, result_limit=8, max_steps=1500,
+        trace_every=25,
+        execution=Execution(queries_axis=True, async_workers=2, cache=-1),
+    )
+    assert plan.resolve() == ("async_multi", "exact")
+    res = plan.run(_fresh_multi(chunks, q_n), chunks, detector=det)
+    for q in range(q_n):
+        solo_out, solo_trace = _solo(
+            chunks, det, q, result_limit=8, max_steps=1500, cohorts=2,
+            trace_every=25,
+        )
+        _assert_row_equals_solo(res.carry, res.traces[q], q, solo_out,
+                                solo_trace)
+    assert res.stats.merges == res.stats.rounds > 0
+    assert res.stats.frames_sampled == int(np.asarray(res.carry.step).sum())
+    assert res.stats.results_spilled == 0
+    # the shared cache + per-batch dedup amortize detector invocations:
+    # never more fresh calls than frames sampled
+    assert res.stats.detector_invocations <= res.stats.frames_sampled
+
+
+# ---------------------------------------------------------------------------
+# Synchronous pump harness (no worker threads — deterministic scheduling)
+# ---------------------------------------------------------------------------
+
+
+def _drain(driver):
+    items = []
+    while True:
+        try:
+            item = driver._work.get_nowait()
+        except Exception:
+            break
+        if item is not None:
+            items.append(item)
+    return items
+
+
+def _pump_round(driver):
+    """Issue every ready slot and merge it synchronously; returns the
+    number of batches processed."""
+    driver._issue_ready()
+    batches = _drain(driver)
+    for batch in batches:
+        driver._merge(driver._process_batch(0, batch))
+    return len(batches)
+
+
+def _pump_to_completion(driver, max_pumps=10_000):
+    for _ in range(max_pumps):
+        if not _pump_round(driver) and not driver._inflight:
+            if not any(r.active for r in driver.rows):
+                return
+    raise AssertionError("driver did not converge")
+
+
+# ---------------------------------------------------------------------------
+# Elastic join/retire property
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(r=st.integers(1, 4))
+def test_admitted_query_equals_reduced_budget_solo(world, r):
+    """A query admitted after r pool rounds behaves exactly like one
+    present from round 0 with its frame budget reduced by the frames it
+    missed — i.e. a solo run at ``max_steps − cohorts × r``."""
+    _, chunks, det = world
+    cohorts = 2
+    driver = AsyncMultiSearchDriver(
+        _fresh_multi(chunks, 2), chunks, det,
+        cohorts=cohorts, num_workers=1, result_limits=50,
+        max_steps=200, slots_per_batch=2,
+    )
+    for _ in range(r):
+        assert _pump_round(driver) == 1
+    assert driver.pool_rounds() == r
+    row_idx = driver.admit(_qkey(9), result_limit=8)
+    budget = driver.rows[row_idx].budget
+    assert budget == 200 - cohorts * r
+    _pump_to_completion(driver)
+    out = stack_carries([row.carry for row in driver.rows])
+    solo_out, _ = _solo(chunks, det, 9, result_limit=8, max_steps=budget,
+                        cohorts=cohorts)
+    assert int(out.step[row_idx]) == int(solo_out.step)
+    assert int(out.results[row_idx]) == int(solo_out.results)
+    assert bool(jnp.all(out.key[row_idx] == solo_out.key))
+    np.testing.assert_array_equal(out.sampler.n[row_idx], solo_out.sampler.n)
+    np.testing.assert_array_equal(out.sampler.n1[row_idx],
+                                  solo_out.sampler.n1)
+
+
+def test_retired_rows_frozen_and_masked(world):
+    """A finished query retires: its row stops issuing and its carry no
+    longer changes while the rest of the pool keeps running."""
+    _, chunks, det = world
+    driver = AsyncMultiSearchDriver(
+        _fresh_multi(chunks, 2), chunks, det,
+        cohorts=1, num_workers=1,
+        result_limits=[1, 30],       # q0 finishes almost immediately
+        max_steps=400, slots_per_batch=1,
+    )
+    while driver.rows[0].active:
+        assert _pump_round(driver)
+    frozen = driver.rows[0].carry
+    for _ in range(5):
+        _pump_round(driver)
+    assert int(driver.rows[0].carry.step) == int(frozen.step)
+    assert bool(jnp.all(driver.rows[0].carry.key == frozen.key))
+    # retire closed the trace with the unconditional final checkpoint
+    assert driver.rows[0].trace[-1] == (
+        int(frozen.step), int(frozen.results)
+    )
+    _pump_to_completion(driver)
+    assert not any(row.active for row in driver.rows)
+
+
+# ---------------------------------------------------------------------------
+# Straggler re-issue: at-most-once merge
+# ---------------------------------------------------------------------------
+
+
+def test_forced_reissue_merges_at_most_once(world):
+    """A re-issued slot batch reprocesses the identical work item; the
+    second completion is dropped by the pending set and the committed
+    state equals a single merge."""
+    _, chunks, det = world
+    driver = AsyncMultiSearchDriver(
+        _fresh_multi(chunks, 2), chunks, det,
+        cohorts=1, num_workers=1, result_limits=20,
+        max_steps=300, slots_per_batch=2,
+    )
+    driver._issue_ready()
+    (batch,) = _drain(driver)
+    res_first = driver._process_batch(0, batch)
+    driver._reissue(batch.batch_id)
+    (dup,) = _drain(driver)
+    assert dup.batch_id == batch.batch_id and dup.issue_count == 1
+    res_dup = driver._process_batch(1, dup)
+    driver._merge(res_first)
+    snapshot = [jax.tree.map(np.asarray, row.carry) for row in driver.rows]
+    merges_after_first = driver.stats["merges"]
+    driver._merge(res_dup)
+    assert driver.stats["duplicate_drops"] == 1
+    assert driver.stats["reissues"] == 1
+    assert driver.stats["merges"] == merges_after_first
+    for row, snap in zip(driver.rows, snapshot):
+        assert int(row.carry.step) == int(snap.step)
+        np.testing.assert_array_equal(
+            np.asarray(row.carry.sampler.n), snap.sampler.n
+        )
+    _pump_to_completion(driver)
+
+
+# ---------------------------------------------------------------------------
+# Ring-spill contract: overflow-free, zero result loss
+# ---------------------------------------------------------------------------
+
+
+def test_tiny_ring_spills_without_loss(world):
+    """With a ring far smaller than the result count the composed path
+    never raises MatcherRingOverflow and never loses a result: every
+    distinct insertion is live on-device or in the host ResultLog."""
+    repo, chunks, _ = world
+    det = lambda key, frame: oracle_detect(
+        repo, frame, query_class=0, max_dets=4
+    )
+    q_n = 2
+    driver = AsyncMultiSearchDriver(
+        _fresh_multi(chunks, q_n, max_results=8), chunks, det,
+        cohorts=1, num_workers=2, result_limits=40, max_steps=3000,
+    )
+    out = driver.run()    # must not raise
+    assert driver.stats["spilled"] > 0
+    total_logged = 0
+    for q in range(q_n):
+        live = int(np.sum(np.asarray(out.matcher.times_seen[q]) > 0))
+        logged = len(driver.logs[q])
+        assert int(out.results[q]) == live + logged
+        assert int(out.matcher.total_inserted[q]) == int(out.results[q])
+        total_logged += logged
+    assert driver.stats["spilled"] == total_logged
+    # the log carries real result payloads, not placeholders
+    arrs = driver.logs[0].as_arrays()
+    assert arrs["frame"].shape[0] == len(driver.logs[0])
+    assert np.all(arrs["times_seen"] >= 1)
+
+
+def test_overflow_impossible_by_construction(world):
+    """Configurations whose one-round insertion bound reaches the ring
+    capacity are rejected up front — the only way the composed path
+    could wrap a source ring inside a merge window."""
+    repo, chunks, _ = world
+    det = lambda key, frame: oracle_detect(
+        repo, frame, query_class=0, max_dets=8
+    )
+    with pytest.raises(ValueError, match="capacity"):
+        AsyncMultiSearchDriver(
+            _fresh_multi(chunks, 2, max_results=8), chunks, det,
+            cohorts=1, num_workers=1, result_limits=4, max_steps=100,
+        )
+
+
+def test_stats_keys_exist_at_construction(world):
+    """LoweredPlan.run() packages SearchStats straight from the stats
+    dict — every counter must exist from construction, not first merge."""
+    _, chunks, det = world
+    driver = AsyncMultiSearchDriver(
+        _fresh_multi(chunks, 2), chunks, det, num_workers=1,
+    )
+    assert driver.stats == {
+        "slots": 0, "merges": 0, "reissues": 0, "duplicate_drops": 0,
+        "merge_high_water": 0, "rounds": 0, "spilled": 0,
+        "detector_invocations": 0, "cache_hits": 0,
+    }

@@ -85,6 +85,20 @@ def test_batcher_padding_fraction_matches_hand_count():
     assert abs(b.padding_fraction() + b.occupancy - 1.0) < 1e-12
 
 
+def test_batcher_ratio_stats_defined_before_any_batch():
+    """Regression: ``padding_fraction``/``occupancy`` must not divide by
+    zero before the first batch is emitted — including after ``next_batch``
+    calls that found the queue empty (which advance the round counter but
+    emit nothing)."""
+    b = RequestBatcher(batch_size=4, max_wait_rounds=0)
+    assert b.padding_fraction() == 0.0
+    assert b.occupancy == 1.0
+    assert b.next_batch() is None         # empty queue: no batch, no stats
+    assert b.stats["batches"] == 0
+    assert b.padding_fraction() == 0.0
+    assert b.occupancy == 1.0
+
+
 def test_elastic_plan_feasibility():
     import os
     # single-device "mesh" of shape (1,1) always divides

@@ -56,8 +56,6 @@ from repro.core import (
         # individually-valid options that no lowering can combine
         (SearchPlan(execution=Execution(async_workers=2, shards=4)),
          PlanCompatibilityError, "async_workers"),
-        (SearchPlan(queries=4, execution=Execution(async_workers=2)),
-         PlanCompatibilityError, "async"),
         (SearchPlan(trace_every=16, execution=Execution(async_workers=2)),
          PlanCompatibilityError, "trace"),
         (SearchPlan(execution=Execution(strategy="async")),
@@ -131,6 +129,14 @@ def test_unknown_keys_rejected():
                                         strategy="sharded")),
          "multi_sharded", "wilson_hilferty"),
         (SearchPlan(execution=Execution(async_workers=2)), "async", "exact"),
+        (SearchPlan(queries=4, execution=Execution(async_workers=2)),
+         "async_multi", "exact"),
+        (SearchPlan(execution=Execution(queries_axis=True, async_workers=1,
+                                        cache=-1)),
+         "async_multi", "exact"),
+        (SearchPlan(queries=2, trace_every=16,
+                    execution=Execution(async_workers=2)),
+         "async_multi", "exact"),
     ],
 )
 def test_lowering_kind(plan, kind, method):
@@ -145,7 +151,8 @@ def test_uniform_stats_fields():
     for field in (
         "detector_invocations", "cache_hits", "rounds", "frames_sampled",
         "merge_high_water", "merge_overflow", "merges", "reissues",
-        "duplicate_drops", "matcher_inserted", "matcher_capacity",
+        "duplicate_drops", "results_spilled", "matcher_inserted",
+        "matcher_capacity",
     ):
         assert hasattr(s, field)
     assert s.cache_hit_rate == 0.0
@@ -255,6 +262,12 @@ def test_bench_registry_declares_and_skips():
     for s in SECTIONS:
         if s.execution is None:
             assert should_skip(s, available_devices=1) is None
+    # the async-compose section declares its worker-thread need and only
+    # skips when the host cannot start threads (probed, not assumed)
+    assert "async_compose(sec11)" in by_name
+    async_spec = by_name["async_compose(sec11)"]
+    assert async_spec.execution.async_workers == 4
+    assert should_skip(async_spec, available_devices=1) is None
 
 
 def test_run_reconciles_mesh_with_plan_geometry():
