@@ -1,0 +1,170 @@
+"""Multi-tenant search service (DESIGN.md §12): admission + slot reuse.
+
+The serving question is different from the batch question the other
+benches answer: tenants ARRIVE, the operator grants a finite priced
+budget, and the pool must absorb churn without growing.  This bench
+drives 8 tenants (two predicates × four users) through ONE live
+:class:`~repro.serve.service.SearchService` in two waves — the second
+wave admits mid-flight into slots the first wave retires — plus one
+over-budget plan the admission controller must reject, and reports:
+
+* detector amortization vs the same 8 tenants run one-after-another
+  through solo device-resident scans (no sharing possible),
+* batch-lane occupancy (RequestBatcher convention) and slot-pool size
+  vs peak concurrency,
+* the budget ledger (projected debits vs settled actuals) and
+  per-tenant time-to-first-result.
+
+Gates: zero result loss per tenant (``results == ring live + spilled``),
+the pool never grows past wave-1 concurrency, and the rejected plan
+never runs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Q_CLASSES = (0, 0, 0, 0, 1, 1, 1, 1)   # two predicates × four users
+WORKERS = 4
+WAVE = 4                                # tenants admitted per wave
+
+
+def main(quick: bool = False) -> None:
+    from repro.configs.exsample_paper import dashcam
+    from repro.core import (
+        Execution,
+        SearchPlan,
+        init_carry,
+        init_carry_multi,
+        init_matcher,
+        init_state,
+    )
+    from repro.core.plan import ServiceConfig
+    from repro.serve.service import FINISHED, REJECTED, SearchService
+    from repro.sim import generate
+    from repro.sim.costmodel import CostRates
+    from repro.sim.oracle import class_select, filter_class, oracle_detect
+
+    scale = 0.02 if quick else 0.05
+    limit = 10 if quick else 25
+    budget_frames = 2_048 if quick else 8_192
+    cohorts = 8
+    setup = dashcam(seed=0, scale=scale)
+    repo, chunks = generate(setup.repo)
+    num_classes = int(jnp.max(repo.inst_class)) + 1
+    q_n = len(Q_CLASSES)
+    rates = CostRates()
+    frame_s = 1.0 / rates.detect_fps + 1.0 / rates.random_read_fps
+
+    det_all = lambda key, frame: oracle_detect(repo, frame, query_class=None)
+    keys = [jax.random.fold_in(jax.random.PRNGKey(0), q) for q in range(q_n)]
+    plan = SearchPlan(
+        result_limit=limit, max_steps=budget_frames, cohorts=cohorts,
+        execution=Execution(
+            queries_axis=True,
+            service=ServiceConfig(slo_latency_s=60.0),
+        ),
+    )
+
+    # ---- sequential arm: Q solo scans, one after another (no sharing) ----
+    seq_inv, seq_results, seq_wall = 0, 0, 0.0
+    for q in range(q_n):
+        carry = init_carry_multi(
+            init_state(chunks.length), init_matcher(max_results=4096),
+            jnp.stack([keys[q]]),
+        )
+        t0 = time.perf_counter()
+        res = SearchPlan(
+            queries=1, result_limit=limit, max_steps=budget_frames,
+            cohorts=cohorts, execution=Execution(queries_axis=True),
+        ).run(carry, chunks, detector=det_all,
+              select=class_select(repo, [Q_CLASSES[q]]))
+        seq_wall += time.perf_counter() - t0
+        seq_inv += res.stats.detector_invocations
+        seq_results += sum(res.results)
+
+    # ---- service arm: one live driver, two admission waves ----
+    proto = init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=4096),
+        jnp.stack([jax.random.PRNGKey(0)]),
+    )
+    service = SearchService(
+        proto, chunks, det_all,
+        select=class_select(repo, list(range(num_classes))),
+        budget_s=q_n * budget_frames * frame_s + 1.0,
+        rates=rates, cohorts=cohorts, num_workers=WORKERS,
+        max_steps=budget_frames, cache_frames=chunks.total_frames,
+        slots_per_batch=WAVE,
+    )
+    t0 = time.perf_counter()
+    service.start()
+    for q in range(WAVE):
+        service.submit(f"t{q}", plan, key=keys[q], select_id=Q_CLASSES[q])
+    # one plan that can never fit the ledger: must reject, never run
+    reject = service.submit(
+        "overdraft",
+        SearchPlan(result_limit=limit, max_steps=50 * budget_frames * q_n,
+                   cohorts=cohorts,
+                   execution=Execution(queries_axis=True)),
+        key=jax.random.PRNGKey(99), select_id=0,
+    )
+    # second wave joins mid-flight into retired slots
+    while not any(
+        t.state == FINISHED for t in service.tenants.values()
+    ):
+        time.sleep(0.01)
+    for q in range(WAVE, q_n):
+        service.submit(f"t{q}", plan, key=keys[q], select_id=Q_CLASSES[q])
+    service.drain(deadline_s=600.0)
+    service.stop()
+    svc_wall = time.perf_counter() - t0
+
+    st = service.stats()
+    svc_inv = st["driver"]["detector_invocations"]
+    svc_results = sum(
+        int(t.row_obj.carry.results)
+        for t in service.tenants.values() if t.state == FINISHED
+    )
+    ttfr = [
+        t.slo_report()["ttfr_s"]
+        for t in service.tenants.values()
+        if t.state == FINISHED and t.slo_report()["ttfr_s"] is not None
+    ]
+    seq_per = seq_inv / max(seq_results, 1)
+    svc_per = svc_inv / max(svc_results, 1)
+
+    print("arm,tenants,workers,results,detector_invocations,det_per_result,"
+          "wall_s")
+    print(f"sequential_solo,{q_n},{WORKERS},{seq_results},{seq_inv},"
+          f"{seq_per:.2f},{seq_wall:.2f}")
+    print(f"service,{q_n},{WORKERS},{svc_results},{svc_inv},"
+          f"{svc_per:.2f},{svc_wall:.2f}")
+    ttfr_max = f"{max(ttfr):.2f}" if ttfr else "n/a"
+    print(f"service,occupancy={st['batch']['occupancy']:.2f},"
+          f"pool_rows={len(service.driver.rows)},"
+          f"spent_s={st['budget']['spent_s']:.0f},"
+          f"committed_s={st['budget']['committed_s']:.0f},"
+          f"ttfr_max_s={ttfr_max}")
+
+    # gates
+    assert reject.state == REJECTED
+    assert abs(st["budget"]["committed_s"]) < 1e-6
+    assert len(service.driver.rows) <= WAVE, "pool grew past concurrency"
+    for t in service.tenants.values():
+        if t.state != FINISHED:
+            continue
+        row = t.row_obj
+        live = int((np.asarray(row.carry.matcher.times_seen) > 0).sum())
+        assert int(row.carry.results) == live + len(row.log), (
+            f"{t.tenant_id}: results lost")
+    print(f"gates,reject={reject.state},zero_loss=OK,"
+          f"slot_reuse={'OK' if len(service.driver.rows) <= WAVE else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(quick="--quick" in sys.argv)

@@ -9,6 +9,9 @@
                         sequential single-query async (DESIGN.md §11)
   bench_plan_compose -- Q=8 × 8-shard composed lowering vs sequential-sharded
                         and single-device multi (DESIGN.md §10)
+  bench_service      -- multi-tenant service: 2 admission waves × 4 tenants
+                        on one live driver, budget ledger + slot reuse
+                        (DESIGN.md §12)
   bench_overhead     -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
   bench_kernels      -- kernel reference microbenchmarks (CSV)
   bench_roofline     -- Roofline table from dry-run artifacts
@@ -89,6 +92,7 @@ def _sections() -> list[BenchSpec]:
         bench_plan_compose,
         bench_roofline,
         bench_savings,
+        bench_service,
         bench_sharded,
     )
 
@@ -112,6 +116,10 @@ def _sections() -> list[BenchSpec]:
                   lambda quick: bench_plan_compose.main(quick=quick),
                   execution=Execution(queries_axis=True, shards=8, cache=-1),
                   forces_devices=True),
+        BenchSpec("service(sec12)",
+                  lambda quick: bench_service.main(quick=quick),
+                  execution=Execution(queries_axis=True, async_workers=4,
+                                      cache=-1)),
         BenchSpec("overhead(fig6)", lambda quick: bench_overhead.main()),
         BenchSpec("kernels", lambda quick: bench_kernels.main()),
         BenchSpec("roofline", lambda quick: bench_roofline.main()),

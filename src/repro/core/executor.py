@@ -116,6 +116,24 @@ def lower(plan: SearchPlan) -> "LoweredPlan":
     return LoweredPlan(plan=plan, kind=kind, method=method)
 
 
+def tenant_stats_from_row(row) -> SearchStats:
+    """Uniform per-tenant accounting for the serving path (DESIGN.md §12):
+    package one Q-axis row (an ``AsyncMultiSearchDriver`` ``_QueryRow``,
+    live or vacated) into the same :class:`SearchStats` every batch
+    lowering returns, so a tenant's view of its own query reads identically
+    to a solo run's stats.  Detector economics are attributed by dedup
+    representative — frames a tenant's lane shared with another tenant's
+    batch slot ride for free and appear in neither counter."""
+    return SearchStats(
+        detector_invocations=int(row.fresh_calls),
+        cache_hits=int(row.cache_hits),
+        rounds=int(row.rounds),
+        frames_sampled=int(np.asarray(row.carry.step)),
+        results_spilled=len(row.log),
+        **_matcher_totals(row.carry),
+    )
+
+
 def _matcher_totals(carry: ExSampleCarry) -> dict:
     return dict(
         matcher_inserted=int(np.asarray(carry.matcher.total_inserted).sum()),

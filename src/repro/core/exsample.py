@@ -725,6 +725,7 @@ class RoundAux(NamedTuple):
     flat_frames: jax.Array   # i32[Q*C]
     need: jax.Array          # bool[Q*C]
     fresh: "Detections"      # detector output, leading [Q*C]
+    rep_hit: jax.Array       # bool[Q*C] — representatives served by the cache
 
 
 def multi_round_choose(
@@ -868,7 +869,10 @@ def multi_round_process(
         step=mc.step + c * active.astype(jnp.int32),
         results=results,
     )
-    aux = RoundAux(flat_frames=flat_frames, need=need, fresh=fresh)
+    aux = RoundAux(
+        flat_frames=flat_frames, need=need, fresh=fresh,
+        rep_hit=is_rep & hit,
+    )
     return mc, cache, fresh_calls, cache_hits, aux
 
 

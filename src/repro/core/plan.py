@@ -56,6 +56,42 @@ class PlanCompatibilityError(PlanError):
 
 
 @dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Per-tenant service contract riding on an :class:`Execution`
+    (DESIGN.md §12) — consumed by :class:`repro.serve.service.SearchService`
+    at admission, ignored by every batch lowering.
+
+    * ``slo_latency_s`` — time-to-FIRST-result objective, measured from
+      admission onto the driver (0.0 = no SLO; the service reports
+      attainment, it never kills a query for missing it).
+    * ``priority`` — admission-queue ordering (higher admits first among
+      queued plans; FIFO within a priority level).
+    * ``queue_on_reject`` — a plan whose projected cost exceeds the
+      remaining budget queues for later capacity instead of being
+      rejected outright.
+    """
+
+    slo_latency_s: float = 0.0
+    priority: int = 0
+    queue_on_reject: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServiceConfig":
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise PlanValueError(
+                f"unknown ServiceConfig option(s) {sorted(unknown)}; valid: "
+                f"{sorted(f.name for f in dataclasses.fields(cls))}",
+                field=sorted(unknown)[0],
+            )
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class Execution:
     """HOW a plan runs — the execution strategy half of the split.
 
@@ -78,6 +114,8 @@ class Execution:
       ``None`` disables, ``-1`` sizes it to the repository at run time,
       positive values trade memory for evictions.  Requires the Q-axis
       machinery (the cache lives on the shared detector pass).
+    * ``service`` — optional :class:`ServiceConfig` per-tenant contract
+      (SLO / priority / queue-on-reject); only the serving path reads it.
     """
 
     strategy: str = "auto"
@@ -87,6 +125,13 @@ class Execution:
     sync_every: int = 1
     async_workers: int = 0
     cache: Optional[int] = None
+    service: Optional[ServiceConfig] = None
+
+    def __post_init__(self):
+        if isinstance(self.service, dict):
+            object.__setattr__(
+                self, "service", ServiceConfig.from_dict(self.service)
+            )
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -101,6 +146,8 @@ class Execution:
                 f"{sorted(f.name for f in dataclasses.fields(cls))}",
                 field=sorted(unknown)[0],
             )
+        if isinstance(d.get("service"), dict):
+            d["service"] = ServiceConfig.from_dict(d["service"])
         return cls(**d)
 
 
@@ -204,6 +251,15 @@ class SearchPlan:
             raise PlanValueError(
                 f"cache={ex.cache} must be None, -1 (repository-sized) or a "
                 "positive capacity", field="cache")
+        if ex.service is not None:
+            if ex.service.slo_latency_s < 0:
+                raise PlanValueError(
+                    f"service.slo_latency_s={ex.service.slo_latency_s} must "
+                    "be >= 0 (0 disables the SLO)", field="slo_latency_s")
+            if not isinstance(ex.service.priority, int):
+                raise PlanValueError(
+                    f"service.priority={ex.service.priority!r} must be an "
+                    "int (admission-queue ordering)", field="priority")
 
         # -- cross-option compatibility ------------------------------------
         multi = ex.queries_axis or self.queries > 1

@@ -293,12 +293,12 @@ class AsyncSearchDriver:
             cohort = self._work.get()
             if cohort is None:
                 return
-            self.monitor.assign(wid, cohort.cohort_id)
             t0 = time.monotonic()
+            self.monitor.assign(wid, cohort.cohort_id, now=t0)
             self._results.put(self._process_one(wid, cohort))
             now = time.monotonic()
             self.monitor.heartbeat(wid, now)
-            self.monitor.record_completion(wid, now - t0)
+            self.monitor.record_completion(wid, now - t0, now=now)
 
     # ---- run loop ----------------------------------------------------------
 
@@ -391,6 +391,7 @@ class SlotBatch:
     carry: ExSampleCarry        # gathered rows, leading [B]
     choice: RoundChoice         # leading [B]
     active: np.ndarray          # bool[B] — False = padding lane
+    select_ids: np.ndarray = None   # i32[B] — id handed to select() per lane
     issue_count: int = 0        # >1 ⇒ re-issued (straggler/death)
 
 
@@ -406,7 +407,17 @@ class SlotResult:
 
 @dataclasses.dataclass
 class _QueryRow:
-    """One query's slot in the elastic pool."""
+    """One query's slot in the elastic pool.
+
+    Beyond the carry itself the row holds the per-tenant accounting the
+    service front reports: detector economics attributed to this query
+    (``fresh_calls``/``cache_hits`` — by dedup representative, so a frame
+    two tenants sampled in one batch bills the first), wall-clock result
+    stamps for SLO tracking, and the admission metadata.  ``select_id`` is
+    the id handed to the ``select`` predicate instead of the row index, so
+    a service can bind a tenant's predicate (e.g. its query class) at
+    admission without recompiling anything; ``vacant`` marks a released
+    slot ``admit()`` may reuse."""
 
     carry: ExSampleCarry        # single-query carry (scalar step/results)
     limit: int                  # distinct-result target
@@ -416,6 +427,15 @@ class _QueryRow:
     active: bool = True         # False = retired (finished or failed)
     inflight: bool = False      # a slot for this query is checked out
     rounds: int = 0             # rounds merged so far
+    vacant: bool = False        # released slot, reusable by admit()
+    select_id: Optional[int] = None   # id passed to select() (default: row)
+    fresh_calls: int = 0        # detector invocations attributed to this row
+    cache_hits: int = 0         # cache hits attributed to this row
+    admitted_s: float = 0.0     # monotonic wall-clock at admit/construction
+    first_result_s: float = 0.0  # monotonic stamp of the first result merge
+    finished_s: float = 0.0     # monotonic stamp at retire
+    result_stamps: list = dataclasses.field(default_factory=list)
+    # ^ (monotonic_s, cumulative_results) per merge that grew results
 
 
 class AsyncMultiSearchDriver:
@@ -511,6 +531,7 @@ class AsyncMultiSearchDriver:
         self._results: "queue.Queue[SlotResult]" = queue.Queue()
         self._next_batch = 0
         self._inflight: dict[int, SlotBatch] = {}
+        now0 = time.monotonic()
         self.rows = [
             _QueryRow(
                 carry=jax.tree.map(lambda x, q=q: x[q], carries),
@@ -518,9 +539,11 @@ class AsyncMultiSearchDriver:
                 budget=max_steps,
                 trace=[],
                 log=ResultLog(),
+                admitted_s=now0,
             )
             for q in range(q_n)
         ]
+        self._threads: list[threading.Thread] = []
         # no-overflow guarantee for the composed path: a round inserts at
         # most cohorts × (detector slots per frame) entries per query, and
         # a merge window is exactly one round — keep it under capacity so
@@ -550,6 +573,10 @@ class AsyncMultiSearchDriver:
             "slots": 0, "merges": 0, "reissues": 0, "duplicate_drops": 0,
             "merge_high_water": 0, "rounds": 0, "spilled": 0,
             "detector_invocations": 0, "cache_hits": 0,
+            # detector-batch occupancy accounting (RequestBatcher semantics
+            # over slot lanes): how many lanes of each emitted SlotBatch
+            # carried a live query vs sentinel padding
+            "lanes_issued": 0, "lanes_padded": 0,
         }
 
     # ---- row liveness / elasticity ----------------------------------------
@@ -567,7 +594,28 @@ class AsyncMultiSearchDriver:
         """Mask a finished query out of issue and close its trace with the
         unconditional final checkpoint (``run_search_scan`` semantics)."""
         row.active = False
+        row.finished_s = time.monotonic()
         row.trace.append((int(row.carry.step), int(row.carry.results)))
+
+    def vacate(self, q: int) -> _QueryRow:
+        """Release row ``q``'s slot for reuse by a later ``admit()``.
+
+        The caller (a persistent service) harvests the row's results
+        first — the returned row object keeps its carry/trace/log, but the
+        SLOT index now belongs to whichever tenant ``admit()`` installs
+        next.  Only a row with no slot in flight can be vacated; an
+        active row is force-retired (masked out of issue) without the
+        final trace checkpoint, which is the prototype-row case of a
+        service that starts with an empty pool."""
+        with self._lock:
+            row = self.rows[q]
+            if row.inflight:
+                raise RuntimeError(
+                    f"row {q} has a slot in flight; merge it before vacating"
+                )
+            row.active = False
+            row.vacant = True
+            return row
 
     def pool_rounds(self) -> int:
         """Pool progress clock: rounds completed by the furthest-ahead
@@ -581,16 +629,23 @@ class AsyncMultiSearchDriver:
         *,
         result_limit: int,
         max_steps: Optional[int] = None,
+        base_max_steps: Optional[int] = None,
+        select_id: Optional[int] = None,
     ) -> int:
         """Join a fresh query mid-flight; returns its row index.
 
         The new row starts from zeroed sampler statistics and an empty
         matcher (same geometry/thresholds as the pool) and is issuable
         from the next ``_issue_ready`` call.  Its frame budget defaults to
-        ``driver.max_steps − cohorts × pool_rounds()`` — a query admitted
-        at round r behaves exactly like one present from round 0 whose
-        budget was reduced by the frames it missed (the join/retire
-        property, tests/test_async_compose.py)."""
+        ``base − cohorts × pool_rounds()`` where ``base`` is
+        ``base_max_steps`` (a tenant's own requested budget) or the
+        pool's ``max_steps`` — a query admitted at round r behaves exactly
+        like one present from round 0 whose budget was reduced by the
+        frames it missed (the join/retire property,
+        tests/test_async_compose.py).  ``max_steps`` overrides the debit
+        entirely.  ``select_id`` is handed to the ``select`` predicate in
+        place of the row index (tenant→predicate binding, no recompile).
+        Vacated slots (``vacate``) are reused before the pool grows."""
         proto = self.rows[0].carry
         m0 = proto.matcher
         fresh_matcher = dataclasses.replace(
@@ -616,17 +671,25 @@ class AsyncMultiSearchDriver:
             results=jnp.zeros((), jnp.int32),
         )
         with self._lock:
+            base = self.max_steps if base_max_steps is None else base_max_steps
             budget = (
-                max(0, self.max_steps - self.cohorts * self.pool_rounds())
+                max(0, base - self.cohorts * self.pool_rounds())
                 if max_steps is None
                 else max_steps
             )
             row = _QueryRow(
                 carry=carry, limit=int(result_limit), budget=budget,
-                trace=[], log=ResultLog(),
+                trace=[], log=ResultLog(), select_id=select_id,
+                admitted_s=time.monotonic(),
             )
-            self.rows.append(row)
-            return len(self.rows) - 1
+            slot = next(
+                (i for i, r in enumerate(self.rows) if r.vacant), None
+            )
+            if slot is None:
+                self.rows.append(row)
+                return len(self.rows) - 1
+            self.rows[slot] = row
+            return slot
 
     # ---- driver side -------------------------------------------------------
 
@@ -654,14 +717,26 @@ class AsyncMultiSearchDriver:
                 choice = _issue_slots(
                     sub, self.chunks, cohorts=self.cohorts, method=self.method
                 )
+                select_ids = np.asarray(
+                    [
+                        self.rows[i].select_id
+                        if self.rows[i].select_id is not None
+                        else i
+                        for i in lanes
+                    ],
+                    np.int32,
+                )
                 batch = SlotBatch(
                     batch_id=self._next_batch,
                     query_rows=np.asarray(lanes, np.int32),
                     carry=sub,
                     choice=choice,
                     active=active,
+                    select_ids=select_ids,
                 )
                 self._next_batch += 1
+                self.stats["lanes_issued"] += len(group)
+                self.stats["lanes_padded"] += pad
                 for i in group:
                     self.rows[i].inflight = True
                 self._inflight[batch.batch_id] = batch
@@ -684,6 +759,7 @@ class AsyncMultiSearchDriver:
         serialized, so the worker's output is the row's unique successor.
         Live ring entries the round evicted spill to the row's host
         ``ResultLog`` before the replacement lands."""
+        now = time.monotonic()
         with self._lock:
             batch = self._inflight.pop(res.batch_id, None)
             if batch is None:
@@ -698,10 +774,20 @@ class AsyncMultiSearchDriver:
             self.stats["cache_hits"] += res.cache_hits
             self.stats["merges"] += 1
             self.stats["rounds"] += 1
+            # per-lane detector economics: reshape the flat [B = lanes*C]
+            # dedup bookkeeping back to (lanes, cohorts) and attribute each
+            # fresh detector call / cache hit to the lane that REPRESENTED
+            # the frame (duplicates within the batch ride for free, which
+            # is exactly the shared-ingest story the service reports).
+            lanes_n = len(batch.query_rows)
+            need_l = np.asarray(res.aux.need).reshape(lanes_n, -1)
+            rep_hit_l = np.asarray(res.aux.rep_hit).reshape(lanes_n, -1)
             for lane, qrow in enumerate(batch.query_rows):
                 if not batch.active[lane]:
                     continue
                 row = self.rows[int(qrow)]
+                row.fresh_calls += int(need_l[lane].sum())
+                row.cache_hits += int(rep_hit_l[lane].sum())
                 new_carry = jax.tree.map(
                     lambda x, lane=lane: x[lane], res.carry
                 )
@@ -721,6 +807,11 @@ class AsyncMultiSearchDriver:
                     s0, s1 = int(row.carry.step), int(new_carry.step)
                     if (s1 // self.trace_every) > (s0 // self.trace_every):
                         row.trace.append((s1, int(new_carry.results)))
+                grew = int(new_carry.results) > int(row.carry.results)
+                if grew:
+                    if not row.first_result_s:
+                        row.first_result_s = now
+                    row.result_stamps.append((now, int(new_carry.results)))
                 row.carry = new_carry
                 row.rounds += 1
                 row.inflight = False
@@ -746,7 +837,16 @@ class AsyncMultiSearchDriver:
         be mid-merge on another thread."""
         with self._lock:
             cache = self.cache
-        qids = jnp.asarray(batch.query_rows, jnp.int32)
+        # query_ids only feeds ``select(qi, dets)`` in the round body, so a
+        # tenant's select_id re-binds which predicate its lane evaluates
+        # without changing shapes (no recompile); None falls back to the
+        # row index, preserving the solo-parity contract.
+        qids = jnp.asarray(
+            batch.select_ids
+            if batch.select_ids is not None
+            else batch.query_rows,
+            jnp.int32,
+        )
         active = jnp.asarray(batch.active)
         out, _cache, fresh_calls, cache_hits, aux = _process_slots(
             batch.carry, cache, self.chunks, qids, active, batch.choice,
@@ -767,48 +867,72 @@ class AsyncMultiSearchDriver:
             batch = self._work.get()
             if batch is None:
                 return
-            self.monitor.assign(wid, batch.batch_id)
             t0 = time.monotonic()
+            self.monitor.assign(wid, batch.batch_id, now=t0)
             self._results.put(self._process_batch(wid, batch))
             now = time.monotonic()
             self.monitor.heartbeat(wid, now)
-            self.monitor.record_completion(wid, now - t0)
+            self.monitor.record_completion(wid, now - t0, now=now)
 
     # ---- run loop ----------------------------------------------------------
+
+    def start(self) -> None:
+        """Spawn the worker pool once; idempotent.  Service mode keeps the
+        pool alive across many ``admit``/``vacate`` cycles — workers block
+        on the work queue between batches, they do not poll."""
+        if self._threads:
+            return
+        self._threads = [
+            threading.Thread(target=self._worker, args=(w,), daemon=True)
+            for w in range(self.num_workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def stop(self) -> None:
+        """Drain the worker pool (None sentinels) and join; idempotent."""
+        threads, self._threads = self._threads, []
+        for _ in threads:
+            self._work.put(None)
+        for t in threads:
+            t.join(timeout=5.0)
+
+    def idle(self) -> bool:
+        """True when nothing is in flight and no row wants more rounds."""
+        with self._lock:
+            return not self._inflight and not any(
+                r.active for r in self.rows
+            )
+
+    def service_tick(self, timeout: float = 0.1) -> bool:
+        """One scheduler heartbeat: issue what is issuable, merge at most
+        one completed batch, sweep for stragglers.  Returns True if a
+        result was merged (False = the wait timed out — callers use this
+        to interleave admission work without busy-spinning)."""
+        self._issue_ready()
+        try:
+            res = self._results.get(timeout=timeout)
+        except queue.Empty:
+            return False
+        self._merge(res)
+        actions = self.monitor.sweep(time.monotonic())
+        for bid in actions["reissue_cohorts"]:
+            self._reissue(bid)
+        self._issue_ready()
+        return True
 
     def run(self) -> ExSampleCarry:
         """Drive every query to completion; returns the stacked [Q] carry
         (retired rows keep their final state).  Per-query traces are in
         ``self.traces``, spilled results in ``self.logs``."""
-        threads = [
-            threading.Thread(target=self._worker, args=(w,), daemon=True)
-            for w in range(self.num_workers)
-        ]
-        for t in threads:
-            t.start()
+        self.start()
         try:
             self._issue_ready()
-            while True:
-                with self._lock:
-                    done = not self._inflight and not any(
-                        r.active for r in self.rows
-                    )
-                if done:
+            while not self.idle():
+                if not self.service_tick(timeout=60.0):
                     break
-                try:
-                    res = self._results.get(timeout=60.0)
-                except queue.Empty:
-                    break
-                self._merge(res)
-                actions = self.monitor.sweep(time.monotonic())
-                for bid in actions["reissue_cohorts"]:
-                    self._reissue(bid)
-                self._issue_ready()
         finally:
-            for _ in threads:
-                self._work.put(None)
-            for t in threads:
-                t.join(timeout=5.0)
+            self.stop()
         # rows still active (abnormal exit) close their trace like the
         # scan driver's unconditional final checkpoint
         for row in self.rows:

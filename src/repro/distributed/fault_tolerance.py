@@ -42,6 +42,7 @@ class WorkerInfo:
     last_heartbeat: float
     state: WorkerState = WorkerState.HEALTHY
     inflight_cohort: Optional[int] = None
+    inflight_since: Optional[float] = None   # assign() timestamp
     completed: int = 0
     ema_latency: float = 0.0
 
@@ -61,23 +62,55 @@ class HeartbeatMonitor:
     def register(self, worker: int, now: float) -> None:
         self.workers[worker] = WorkerInfo(last_heartbeat=now)
 
+    def _ensure(self, worker: int, now: float) -> WorkerInfo:
+        """Register-on-first-contact: a restarted driver process observing
+        an old worker's heartbeat (or completion) must absorb it, not
+        KeyError — the monitor's view of the fleet is rebuilt from the
+        messages themselves."""
+        w = self.workers.get(worker)
+        if w is None:
+            self.register(worker, now)
+            w = self.workers[worker]
+        return w
+
     def heartbeat(self, worker: int, now: float) -> None:
-        w = self.workers[worker]
+        w = self._ensure(worker, now)
         w.last_heartbeat = now
         if w.state is not WorkerState.DEAD:
             w.state = WorkerState.HEALTHY
 
-    def record_completion(self, worker: int, latency: float) -> None:
-        w = self.workers[worker]
+    def record_completion(
+        self, worker: int, latency: float, now: Optional[float] = None
+    ) -> None:
+        w = (
+            self._ensure(worker, now)
+            if now is not None
+            else self.workers.get(worker)
+        )
+        if w is None:
+            # unknown worker and no timestamp to register it against: create
+            # it with an unknowable heartbeat of 0.0 rather than raising —
+            # the next real heartbeat corrects liveness
+            self.register(worker, now=0.0)
+            w = self.workers[worker]
         w.completed += 1
         w.inflight_cohort = None
+        w.inflight_since = None
         w.ema_latency = (
             latency if w.ema_latency == 0
             else self.ema * w.ema_latency + (1 - self.ema) * latency
         )
 
-    def assign(self, worker: int, cohort: int) -> None:
-        self.workers[worker].inflight_cohort = cohort
+    def assign(
+        self, worker: int, cohort: int, now: Optional[float] = None
+    ) -> None:
+        """Record that ``worker`` started ``cohort`` at ``now`` —
+        ``inflight_since`` is what the straggler rule measures against
+        (without a timestamp the cohort can only be re-issued on death,
+        never as a straggler)."""
+        w = self._ensure(worker, now if now is not None else 0.0)
+        w.inflight_cohort = cohort
+        w.inflight_since = now
 
     def sweep(self, now: float) -> dict:
         """Advance liveness states; return actions."""
@@ -92,18 +125,27 @@ class HeartbeatMonitor:
                 if w.inflight_cohort is not None:
                     reissue.append(w.inflight_cohort)
                     w.inflight_cohort = None
+                    w.inflight_since = None
             elif silent >= self.suspect_after_s and w.state is WorkerState.HEALTHY:
                 w.state = WorkerState.SUSPECT
                 suspects.append(wid)
-            # straggler: alive but its inflight cohort is way over budget
+            # straggler: alive but its inflight cohort is way over budget.
+            # The rule measures THE COHORT's elapsed time (now −
+            # inflight_since), not the worker's historical ema_latency: one
+            # slow completed cohort inflates the EMA for ~1/(1−ema) sweeps,
+            # and comparing the EMA to the median would re-issue every
+            # subsequent cohort from that worker the moment it is assigned
+            # — duplicate work for an entire recovery window.
             if (
                 w.state is WorkerState.HEALTHY
                 and w.inflight_cohort is not None
+                and w.inflight_since is not None
                 and median > 0
-                and w.ema_latency > self.straggler_factor * median
+                and (now - w.inflight_since) > self.straggler_factor * median
             ):
                 reissue.append(w.inflight_cohort)
                 w.inflight_cohort = None
+                w.inflight_since = None
         return {"dead": dead, "suspect": suspects, "reissue_cohorts": reissue}
 
     @property

@@ -90,14 +90,15 @@ class RequestBatcher:
 
     @property
     def occupancy(self) -> float:
-        b = self.stats["batches"]
-        if not b:
-            return 1.0
-        return self.stats["frames"] / (b * self.batch_size)
+        """Fraction of emitted device slots that carried real frames —
+        defined as ``1 − padding_fraction()`` so the two ratios are
+        consistent BY CONSTRUCTION, including before any batch has been
+        emitted (occupancy 1.0, padding 0.0: an empty history wastes no
+        slots)."""
+        return 1.0 - self.padding_fraction()
 
     def padding_fraction(self) -> float:
-        """Fraction of emitted device slots that were sentinel padding —
-        the complement of ``occupancy`` over the batches actually emitted
+        """Fraction of emitted device slots that were sentinel padding
         (0.0 before any batch has been emitted)."""
         b = self.stats["batches"]
         if not b:
@@ -158,9 +159,14 @@ def init_detection_cache(det_struct: Any, capacity: int) -> DetectionCache:
 
 
 def cache_lookup(cache: DetectionCache, frame_ids: jax.Array):
-    """(hit bool[B], detections pytree with leading [B]) for each frame."""
+    """(hit bool[B], detections pytree with leading [B]) for each frame.
+
+    Sentinel/padding slots (``frame_ids < 0``) NEVER hit: a padded frame id
+    of -1 maps to slot ``capacity-1`` and would compare equal to the
+    empty-slot tag -1, reporting a phantom hit whose gathered "detections"
+    are garbage (zeros or whatever real frame lives there)."""
     slot = frame_ids % cache.capacity
-    hit = cache.tag[slot] == frame_ids
+    hit = (frame_ids >= 0) & (cache.tag[slot] == frame_ids)
     vals = jax.tree.map(lambda x: x[slot], cache.store)
     return hit, vals
 
@@ -170,11 +176,15 @@ def cache_insert(
 ) -> DetectionCache:
     """Insert ``dets`` (leading [B]) for masked frames.  When two distinct
     masked frames collide on one cache slot within a batch the first wins —
-    scatter order over duplicate indices is otherwise unspecified."""
+    scatter order over duplicate indices is otherwise unspecified.
+    Sentinel frames (``frame_ids < 0``) never insert, whatever ``mask``
+    says: a -1 padding id would otherwise tag slot ``capacity-1`` with -1
+    and poison every later lookup of a real frame in that slot."""
     s = cache.capacity
     slot = (frame_ids % s).astype(jnp.int32)
-    first = dedup_first_index(slot, mask)
-    keep = mask & (first == jnp.arange(slot.shape[0], dtype=jnp.int32))
+    valid = mask & (frame_ids >= 0)
+    first = dedup_first_index(slot, valid)
+    keep = valid & (first == jnp.arange(slot.shape[0], dtype=jnp.int32))
     tgt = jnp.where(keep, slot, s)
     tag = cache.tag.at[tgt].set(frame_ids, mode="drop")
     store = jax.tree.map(

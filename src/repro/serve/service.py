@@ -1,0 +1,359 @@
+"""Multi-tenant search service: admission + SLO scheduling (DESIGN.md §12).
+
+The batch planner (DESIGN.md §10) answers "run these Q queries"; a video
+repository in production answers a different question: queries ARRIVE, at
+any time, from different tenants, and the operator grants a finite
+GPU-time budget.  :class:`SearchService` is the persistent layer between
+the two — it accepts declarative :class:`~repro.core.plan.SearchPlan`\\ s
+(JSON over the thin ``repro.launch.serve_search`` front) and admits them
+onto free Q-axis slots of ONE long-running
+:class:`~repro.core.runtime.AsyncMultiSearchDriver`:
+
+* **Admission control** prices each plan BEFORE it runs
+  (:func:`~repro.sim.costmodel.plan_projected_cost` under the operator's
+  :class:`~repro.sim.costmodel.CostRates`) and debits a
+  :class:`~repro.sim.costmodel.CostBudget`.  A plan whose projection
+  exceeds the remaining headroom is rejected — or, with
+  ``ServiceConfig.queue_on_reject``, parked in a priority queue until a
+  retirement frees capacity.  Projections are upper bounds, so the ledger
+  is race-free: unspent cost is credited back when the tenant retires.
+* **Slot reuse**: a finished tenant's row is harvested
+  (:func:`~repro.core.executor.tenant_stats_from_row`) and its slot
+  ``vacate``\\ d; the next admission reuses it, so the pool's device
+  footprint tracks CONCURRENCY, not tenant count.
+* **SLO tracking**: each tenant's time-to-first-result is measured from
+  admission against its ``ServiceConfig.slo_latency_s``.  The service
+  reports attainment; it never kills a query for missing an SLO.
+* **Fair detector-batch sharing**: tenants share the driver's deduplicated
+  detector pass and :class:`~repro.serve.batcher.DetectionCache`; batch
+  occupancy is accounted with the same ``occupancy = 1 − padding``
+  convention as :class:`~repro.serve.batcher.RequestBatcher`, and detector
+  economics are attributed per tenant by dedup representative.
+
+Parity contract (tests/test_service.py): the driver's at-most-one-slot
+invariant is untouched, so each admitted tenant's result stream is
+bit-identical to its own solo ``run_search_scan`` run at its debited
+frame budget — multi-tenancy changes WHICH detector invocations happen
+(sharing), never the values any tenant consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Optional
+
+import jax
+
+from repro.core.executor import SearchStats, tenant_stats_from_row
+from repro.core.plan import PlanError, SearchPlan, ServiceConfig
+from repro.core.runtime import AsyncMultiSearchDriver
+from repro.sim.costmodel import (
+    CostBudget,
+    CostRates,
+    plan_projected_cost,
+    sampling_cost,
+)
+
+QUEUED = "queued"
+RUNNING = "running"
+FINISHED = "finished"
+REJECTED = "rejected"
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One submitted plan's lifecycle record (QUEUED → RUNNING → FINISHED,
+    or REJECTED at admission)."""
+
+    tenant_id: str
+    plan: SearchPlan
+    key: jax.Array
+    select_id: Optional[int]
+    service: ServiceConfig
+    projected_s: float
+    seq: int                         # FIFO tiebreak within a priority level
+    state: str = QUEUED
+    reason: str = ""                 # rejection reason (REJECTED only)
+    row: Optional[int] = None        # driver slot index while RUNNING
+    row_obj: object = None           # harvested _QueryRow once FINISHED
+    actual_s: float = 0.0            # settled realized cost
+    submitted_s: float = 0.0
+
+    # ---- reporting ---------------------------------------------------------
+
+    @property
+    def stats(self) -> Optional[SearchStats]:
+        if self.row_obj is None:
+            return None
+        return tenant_stats_from_row(self.row_obj)
+
+    def slo_report(self) -> dict:
+        """Time-to-first-result against this tenant's SLO.  ``ttfr_s`` is
+        None until a first result merges; ``slo_met`` is None when no SLO
+        was declared (slo_latency_s == 0)."""
+        row = self.row_obj
+        ttfr = None
+        if row is not None and row.first_result_s:
+            ttfr = row.first_result_s - row.admitted_s
+        slo = self.service.slo_latency_s
+        return {
+            "slo_latency_s": slo,
+            "ttfr_s": ttfr,
+            "slo_met": (ttfr is not None and ttfr <= slo) if slo > 0 else None,
+        }
+
+    def to_dict(self) -> dict:
+        d = {
+            "tenant": self.tenant_id,
+            "state": self.state,
+            "projected_s": self.projected_s,
+            "priority": self.service.priority,
+        }
+        if self.state == REJECTED:
+            d["reason"] = self.reason
+        if self.row_obj is not None:
+            row = self.row_obj
+            st = self.stats
+            d.update(
+                results=int(row.carry.results),
+                steps=int(row.carry.step),
+                spilled=len(row.log),
+                detector_invocations=st.detector_invocations,
+                cache_hits=st.cache_hits,
+                actual_s=self.actual_s,
+                **self.slo_report(),
+            )
+        return d
+
+
+class SearchService:
+    """Persistent multi-tenant front over one elastic slot driver.
+
+    The service owns the driver (constructed around a vacated prototype
+    row, so the pool starts empty), the cost ledger and the admission
+    queue.  ``submit`` is thread-safe; the pump — either the background
+    thread ``start(pump=True)`` spawns or explicit ``tick()`` calls —
+    merges rounds, harvests finished tenants and admits queued ones as
+    capacity frees.
+    """
+
+    def __init__(
+        self,
+        carry_proto,
+        chunks,
+        detector,
+        *,
+        select=None,
+        budget_s: float = float("inf"),
+        rates: CostRates = CostRates(),
+        cohorts: int = 4,
+        num_workers: int = 2,
+        max_steps: int = 100_000,
+        cache_frames: int = 0,
+        slots_per_batch: int = 4,
+    ):
+        """``carry_proto`` is a leading-[1] multi-query carry
+        (``init_carry_multi``) fixing the pool's sampler/matcher geometry;
+        its single row is vacated immediately and never runs."""
+        self.rates = rates
+        self.budget = CostBudget(total_s=budget_s)
+        self.driver = AsyncMultiSearchDriver(
+            carry_proto, chunks, detector,
+            cohorts=cohorts, num_workers=num_workers,
+            result_limits=1, max_steps=max_steps, select=select,
+            cache_frames=cache_frames, slots_per_batch=slots_per_batch,
+        )
+        self.driver.vacate(0)
+        self.tenants: dict[str, Tenant] = {}
+        self._queue: list[Tenant] = []
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+        self._stop_evt = threading.Event()
+        self._pump: Optional[threading.Thread] = None
+
+    # ---- lifecycle ---------------------------------------------------------
+
+    def start(self, pump: bool = True) -> None:
+        self.driver.start()
+        if pump and self._pump is None:
+            self._stop_evt.clear()
+            self._pump = threading.Thread(target=self._pump_loop, daemon=True)
+            self._pump.start()
+
+    def stop(self) -> None:
+        if self._pump is not None:
+            self._stop_evt.set()
+            self._pump.join(timeout=10.0)
+            self._pump = None
+        self.driver.stop()
+
+    def _pump_loop(self) -> None:
+        while not self._stop_evt.is_set():
+            self.tick(timeout=0.05)
+
+    # ---- admission ---------------------------------------------------------
+
+    def submit(
+        self,
+        tenant_id: str,
+        plan: SearchPlan,
+        *,
+        key: Optional[jax.Array] = None,
+        seed: int = 0,
+        select_id: Optional[int] = None,
+    ) -> Tenant:
+        """Price ``plan``, then admit / queue / reject it.  One tenant =
+        one Q-axis row, so service plans are single-query; ``select_id``
+        binds the tenant's predicate (e.g. its query class) through the
+        driver's ``select`` hook without recompiling anything."""
+        plan.resolve()   # typed PlanErrors surface before any state change
+        if tenant_id in self.tenants:
+            raise PlanError(
+                f"tenant {tenant_id!r} already submitted", field="tenant")
+        if plan.queries != 1:
+            raise PlanError(
+                f"service plans are single-query (one tenant = one Q-axis "
+                f"slot); got queries={plan.queries} — submit one plan per "
+                "query", field="queries")
+        svc = plan.execution.service or ServiceConfig()
+        projected = plan_projected_cost(plan, self.rates).total_s
+        tenant = Tenant(
+            tenant_id=tenant_id,
+            plan=plan,
+            key=key if key is not None else jax.random.PRNGKey(seed),
+            select_id=select_id,
+            service=svc,
+            projected_s=projected,
+            seq=next(self._seq),
+            submitted_s=time.monotonic(),
+        )
+        with self._lock:
+            self.tenants[tenant_id] = tenant
+            if projected > self.budget.total_s:
+                # can NEVER fit, queueing would deadlock the drain
+                tenant.state = REJECTED
+                tenant.reason = (
+                    f"projected cost {projected:.1f}s exceeds the total "
+                    f"budget {self.budget.total_s:.1f}s")
+            elif self.budget.debit(projected):
+                self._admit(tenant)
+            elif svc.queue_on_reject:
+                tenant.state = QUEUED
+                self._queue.append(tenant)
+            else:
+                tenant.state = REJECTED
+                tenant.reason = (
+                    f"projected cost {projected:.1f}s exceeds remaining "
+                    f"budget {self.budget.remaining_s:.1f}s "
+                    "(set service.queue_on_reject to wait for capacity)")
+        return tenant
+
+    def _admit(self, tenant: Tenant) -> None:
+        """Install an already-debited tenant onto the driver (caller holds
+        the service lock; lock order is service → driver, never back)."""
+        tenant.row = self.driver.admit(
+            tenant.key,
+            result_limit=int(tenant.plan.result_limit),
+            base_max_steps=tenant.plan.max_steps,
+            select_id=tenant.select_id,
+        )
+        tenant.state = RUNNING
+
+    def _admit_queued(self) -> None:
+        """Admit parked plans in (priority, FIFO) order.  Strictly: the
+        head blocks the tail, so a large high-priority plan is never
+        starved by small late arrivals slipping past it."""
+        with self._lock:
+            self._queue.sort(key=lambda t: (-t.service.priority, t.seq))
+            while self._queue:
+                head = self._queue[0]
+                if not self.budget.debit(head.projected_s):
+                    break
+                self._queue.pop(0)
+                self._admit(head)
+
+    # ---- pump --------------------------------------------------------------
+
+    def tick(self, timeout: float = 0.05) -> bool:
+        """One service heartbeat: merge at most one driver batch, harvest
+        retired tenants, admit queued plans into freed capacity."""
+        merged = self.driver.service_tick(timeout=timeout)
+        self._reap()
+        self._admit_queued()
+        return merged
+
+    def _reap(self) -> None:
+        """Harvest tenants whose row retired: capture the row object,
+        vacate its slot for reuse, settle the budget reservation against
+        the realized sampling cost."""
+        for tenant in self.tenants.values():
+            if tenant.state != RUNNING:
+                continue
+            row = self.driver.rows[tenant.row]
+            if row.active or row.inflight or row.vacant:
+                continue
+            tenant.row_obj = self.driver.vacate(tenant.row)
+            tenant.actual_s = sampling_cost(
+                int(row.carry.step), self.rates
+            ).total_s
+            with self._lock:
+                self.budget.settle(tenant.projected_s, tenant.actual_s)
+            tenant.state = FINISHED
+
+    def drain(self, deadline_s: float = 120.0) -> None:
+        """Block until every queued/running tenant finishes.  With the
+        background pump running this polls; without it, it ticks."""
+        t0 = time.monotonic()
+        while self.busy():
+            if time.monotonic() - t0 > deadline_s:
+                raise TimeoutError(
+                    f"drain exceeded {deadline_s}s with "
+                    f"{sum(t.state in (QUEUED, RUNNING) for t in self.tenants.values())} "
+                    "tenants unfinished")
+            if self._pump is not None:
+                time.sleep(0.01)
+            else:
+                self.tick()
+
+    def busy(self) -> bool:
+        return any(
+            t.state in (QUEUED, RUNNING) for t in self.tenants.values()
+        )
+
+    # ---- reporting ---------------------------------------------------------
+
+    def padding_fraction(self) -> float:
+        """RequestBatcher-convention padding over the driver's slot lanes
+        (0.0 before any batch has been issued)."""
+        d = self.driver.stats
+        total = d["lanes_issued"] + d["lanes_padded"]
+        return d["lanes_padded"] / total if total else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """``1 − padding_fraction()`` — consistent by construction, like
+        :attr:`repro.serve.batcher.RequestBatcher.occupancy`."""
+        return 1.0 - self.padding_fraction()
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "tenants": {
+                    tid: t.to_dict() for tid, t in self.tenants.items()
+                },
+                "budget": {
+                    "total_s": self.budget.total_s,
+                    "committed_s": self.budget.committed_s,
+                    "spent_s": self.budget.spent_s,
+                    "remaining_s": self.budget.remaining_s,
+                },
+                "batch": {
+                    "occupancy": self.occupancy,
+                    "padding_fraction": self.padding_fraction(),
+                    "lanes_issued": self.driver.stats["lanes_issued"],
+                    "lanes_padded": self.driver.stats["lanes_padded"],
+                },
+                "driver": dict(self.driver.stats),
+            }

@@ -99,3 +99,57 @@ def full_scan_cost(total_frames: int, rates: CostRates) -> PhaseCosts:
     """Naive plan: run the detector on every frame sequentially."""
     per_frame = 1.0 / rates.detect_fps + 1.0 / rates.scan_fps
     return PhaseCosts(sample_s=total_frames * per_frame / rates.workers)
+
+
+# ---------------------------------------------------------------------------
+# Service-side budget accounting (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def plan_projected_cost(plan, rates: CostRates) -> PhaseCosts:
+    """Conservative admission-time price of a :class:`SearchPlan`: every
+    query runs its full ``max_steps`` frame budget as a pure sampling
+    policy.  An upper bound by construction — queries that hit their
+    result limit early, and frames served from the detection cache, only
+    make the realized cost cheaper — so pricing it BEFORE admission is
+    race-free: the service debits the projection and credits the unspent
+    remainder at retirement."""
+    return sampling_cost(plan.queries * plan.max_steps, rates)
+
+
+@dataclasses.dataclass
+class CostBudget:
+    """Admission-controlled spend ledger for the search service.
+
+    ``total_s`` is the wall-clock (priced, not measured) budget the
+    operator grants; ``committed_s`` holds projections of admitted,
+    still-running plans; ``spent_s`` holds settled actuals.  ``debit``
+    reserves a projection atomically-enough for the service's single
+    admission thread; ``settle`` converts a reservation into its realized
+    cost, crediting the difference back to headroom."""
+
+    total_s: float
+    committed_s: float = 0.0
+    spent_s: float = 0.0
+
+    @property
+    def remaining_s(self) -> float:
+        return self.total_s - self.committed_s - self.spent_s
+
+    def admits(self, projected_s: float) -> bool:
+        return projected_s <= self.remaining_s
+
+    def debit(self, projected_s: float) -> bool:
+        """Reserve ``projected_s`` of headroom; False (no state change)
+        when the projection does not fit."""
+        if not self.admits(projected_s):
+            return False
+        self.committed_s += projected_s
+        return True
+
+    def settle(self, projected_s: float, actual_s: float) -> None:
+        """Release the ``projected_s`` reservation and record the realized
+        ``actual_s`` spend (the projection is an upper bound, so settling
+        normally credits headroom back)."""
+        self.committed_s -= projected_s
+        self.spent_s += actual_s

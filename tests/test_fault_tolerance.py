@@ -32,16 +32,59 @@ def test_dead_worker_cohort_reissued():
     assert actions["reissue_cohorts"] == [42]
 
 
-def test_straggler_detection():
+def test_straggler_detection_uses_inflight_elapsed_time():
+    """Synthetic clock: a cohort in flight far past factor × median is
+    re-issued — based on ITS elapsed time, not the worker's history."""
     mon = HeartbeatMonitor(straggler_factor=3.0)
     for w in range(4):
         mon.register(w, now=0.0)
         mon.heartbeat(w, now=1.0)
-        mon.record_completion(w, latency=1.0)
-    mon.record_completion(3, latency=100.0)   # ema jumps
-    mon.assign(3, cohort=7)
-    actions = mon.sweep(now=2.0)
-    assert 7 in actions["reissue_cohorts"]
+        mon.record_completion(w, latency=1.0, now=1.0)
+    mon.assign(3, cohort=7, now=1.0)
+    # elapsed 1.0 ≤ 3 × median(1.0): still within budget
+    assert mon.sweep(now=2.0)["reissue_cohorts"] == []
+    # elapsed 4.0 > 3.0: over budget ⇒ re-issue exactly once
+    assert mon.sweep(now=5.0)["reissue_cohorts"] == [7]
+    assert mon.sweep(now=6.0)["reissue_cohorts"] == []
+
+
+def test_straggler_ema_history_does_not_condemn_fresh_cohorts():
+    """Regression (synthetic clock): the old rule compared the worker's
+    HISTORICAL ema_latency to the median, so one slow completed cohort
+    caused every subsequent cohort from that worker to be re-issued the
+    moment it was assigned.  A freshly-assigned cohort must get its full
+    factor × median budget regardless of the worker's past."""
+    mon = HeartbeatMonitor(straggler_factor=3.0)
+    for w in range(4):
+        mon.register(w, now=0.0)
+        mon.heartbeat(w, now=1.0)
+        mon.record_completion(w, latency=1.0, now=1.0)
+    # one slow COMPLETED cohort inflates worker 3's EMA way over the median
+    mon.record_completion(3, latency=100.0, now=101.0)
+    mon.heartbeat(3, now=101.0)
+    assert mon.workers[3].ema_latency > 3.0 * 1.0
+    mon.assign(3, cohort=7, now=101.0)
+    # swept immediately after assignment: elapsed ≈ 0 ⇒ NOT a straggler
+    # (fails on the pre-fix ema-vs-median rule, which re-issued cohort 7)
+    assert mon.sweep(now=101.5)["reissue_cohorts"] == []
+    assert mon.workers[3].inflight_cohort == 7
+    # but left in flight past the budget it IS re-issued
+    assert mon.sweep(now=120.0)["reissue_cohorts"] == [7]
+
+
+def test_heartbeat_registers_unknown_worker():
+    """Regression: a restarted driver process observing an old worker's
+    heartbeat (or completion) must absorb it, not KeyError."""
+    mon = HeartbeatMonitor()
+    mon.heartbeat(5, now=10.0)             # never register()ed
+    assert mon.workers[5].state is WorkerState.HEALTHY
+    assert mon.workers[5].last_heartbeat == 10.0
+    mon.record_completion(6, latency=2.0, now=12.0)   # also unknown
+    assert mon.workers[6].completed == 1
+    assert mon.workers[6].ema_latency == 2.0
+    mon.assign(7, cohort=3, now=13.0)      # unknown at assign too
+    assert mon.workers[7].inflight_cohort == 3
+    assert mon.workers[7].inflight_since == 13.0
 
 
 def test_restart_policy():

@@ -325,6 +325,34 @@ def test_cache_roundtrip_and_eviction():
     np.testing.assert_array_equal(np.asarray(hit2), [True, False, True, True])
 
 
+def test_cache_padded_sentinel_frames_never_hit():
+    """Regression: a padded/sentinel frame id of -1 maps to slot
+    ``capacity-1`` (Python modulo) and compared equal to the empty-slot
+    tag -1 — so padding slots of a ``RequestBatcher`` batch reported
+    phantom cache hits against an EMPTY cache and gathered garbage
+    detections.  Sentinels must miss on lookup and be inert on insert."""
+    cache = init_detection_cache(_det_struct(), capacity=4)
+    padded = jnp.asarray([0, -1, -1, 2], jnp.int32)   # Batch.frame_ids style
+    hit, _ = cache_lookup(cache, padded)
+    np.testing.assert_array_equal(np.asarray(hit), [False] * 4)
+
+    # harden cache_insert the same way: seed slot capacity-1 with a real
+    # frame, then insert a padded batch whose mask (wrongly) covers the
+    # sentinels — the real entry must survive and the sentinel never lands
+    dets = {
+        "boxes": jnp.ones((4, 2, 4), jnp.float32),
+        "valid": jnp.ones((4, 2), bool),
+    }
+    cache = cache_insert(
+        cache, jnp.asarray([7], jnp.int32),
+        jax.tree.map(lambda x: x[:1], dets), jnp.ones((1,), bool),
+    )
+    cache = cache_insert(cache, padded, dets, jnp.ones((4,), bool))
+    assert int(cache.tag[3]) == 7                     # not clobbered to -1
+    hit2, _ = cache_lookup(cache, jnp.asarray([7, -1], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(hit2), [True, False])
+
+
 def test_cache_masked_insert_is_noop():
     cache = init_detection_cache(_det_struct(), capacity=4)
     dets = {
