@@ -39,7 +39,11 @@ class WorkerState(enum.Enum):
 
 @dataclasses.dataclass
 class WorkerInfo:
-    last_heartbeat: float
+    # None = registered from a timestamp-less message (legacy caller);
+    # liveness is unknown until a real heartbeat arrives, so sweep()
+    # treats the worker as silent for 0 s rather than fabricating a
+    # monotonic-clock age of `now − 0.0` that would kill it on sight.
+    last_heartbeat: Optional[float]
     state: WorkerState = WorkerState.HEALTHY
     inflight_cohort: Optional[int] = None
     inflight_since: Optional[float] = None   # assign() timestamp
@@ -59,10 +63,10 @@ class HeartbeatMonitor:
     def __post_init__(self):
         self.workers: dict[int, WorkerInfo] = {}
 
-    def register(self, worker: int, now: float) -> None:
+    def register(self, worker: int, now: Optional[float]) -> None:
         self.workers[worker] = WorkerInfo(last_heartbeat=now)
 
-    def _ensure(self, worker: int, now: float) -> WorkerInfo:
+    def _ensure(self, worker: int, now: Optional[float]) -> WorkerInfo:
         """Register-on-first-contact: a restarted driver process observing
         an old worker's heartbeat (or completion) must absorb it, not
         KeyError — the monitor's view of the fleet is rebuilt from the
@@ -82,17 +86,11 @@ class HeartbeatMonitor:
     def record_completion(
         self, worker: int, latency: float, now: Optional[float] = None
     ) -> None:
-        w = (
-            self._ensure(worker, now)
-            if now is not None
-            else self.workers.get(worker)
-        )
-        if w is None:
-            # unknown worker and no timestamp to register it against: create
-            # it with an unknowable heartbeat of 0.0 rather than raising —
-            # the next real heartbeat corrects liveness
-            self.register(worker, now=0.0)
-            w = self.workers[worker]
+        # unknown worker and no timestamp: register with the None sentinel
+        # (NOT 0.0 — on a monotonic clock that reads as dead_after_s of
+        # silence and the next sweep would kill the worker and re-issue
+        # its cohort); the next real heartbeat starts liveness tracking
+        w = self._ensure(worker, now)
         w.completed += 1
         w.inflight_cohort = None
         w.inflight_since = None
@@ -108,7 +106,7 @@ class HeartbeatMonitor:
         ``inflight_since`` is what the straggler rule measures against
         (without a timestamp the cohort can only be re-issued on death,
         never as a straggler)."""
-        w = self._ensure(worker, now if now is not None else 0.0)
+        w = self._ensure(worker, now)
         w.inflight_cohort = cohort
         w.inflight_since = now
 
@@ -118,7 +116,11 @@ class HeartbeatMonitor:
         latencies = [w.ema_latency for w in self.workers.values() if w.ema_latency]
         median = float(np.median(latencies)) if latencies else 0.0
         for wid, w in self.workers.items():
-            silent = now - w.last_heartbeat
+            # no real heartbeat yet (timestamp-less registration): liveness
+            # is unknowable, not overdue — skip dead/suspect transitions
+            # until the first heartbeat; the straggler rule below still
+            # applies if assign() carried a real timestamp
+            silent = 0.0 if w.last_heartbeat is None else now - w.last_heartbeat
             if silent >= self.dead_after_s and w.state is not WorkerState.DEAD:
                 w.state = WorkerState.DEAD
                 dead.append(wid)

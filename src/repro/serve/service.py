@@ -77,7 +77,11 @@ class Tenant:
     state: str = QUEUED
     reason: str = ""                 # rejection reason (REJECTED only)
     row: Optional[int] = None        # driver slot index while RUNNING
-    row_obj: object = None           # harvested _QueryRow once FINISHED
+    row_obj: object = None           # this tenant's _QueryRow, bound at
+    #   admission.  The binding is by OBJECT, not slot index: ``admit``
+    #   installs a fresh row per tenant and ``vacate`` returns that same
+    #   object, so the reference stays valid (and reports live SLO/result
+    #   state) even after the slot index is reused by a later tenant.
     actual_s: float = 0.0            # settled realized cost
     submitted_s: float = 0.0
 
@@ -92,16 +96,28 @@ class Tenant:
     def slo_report(self) -> dict:
         """Time-to-first-result against this tenant's SLO.  ``ttfr_s`` is
         None until a first result merges; ``slo_met`` is None when no SLO
-        was declared (slo_latency_s == 0)."""
+        was declared (slo_latency_s == 0).  The row is bound at admission,
+        so attainment is visible while the tenant is still RUNNING — the
+        driver stamps ``first_result_s`` at the merge, not at reap."""
         row = self.row_obj
         ttfr = None
         if row is not None and row.first_result_s:
             ttfr = row.first_result_s - row.admitted_s
         slo = self.service.slo_latency_s
+        if slo <= 0:
+            met = None                     # no SLO declared
+        elif ttfr is not None:
+            met = ttfr <= slo
+        elif self.state in (QUEUED, RUNNING) and (
+            row is None or time.monotonic() - row.admitted_s <= slo
+        ):
+            met = None                     # undetermined: window still open
+        else:
+            met = False                    # no first result inside the window
         return {
             "slo_latency_s": slo,
             "ttfr_s": ttfr,
-            "slo_met": (ttfr is not None and ttfr <= slo) if slo > 0 else None,
+            "slo_met": met,
         }
 
     def to_dict(self) -> dict:
@@ -209,9 +225,6 @@ class SearchService:
         binds the tenant's predicate (e.g. its query class) through the
         driver's ``select`` hook without recompiling anything."""
         plan.resolve()   # typed PlanErrors surface before any state change
-        if tenant_id in self.tenants:
-            raise PlanError(
-                f"tenant {tenant_id!r} already submitted", field="tenant")
         if plan.queries != 1:
             raise PlanError(
                 f"service plans are single-query (one tenant = one Q-axis "
@@ -230,13 +243,18 @@ class SearchService:
             submitted_s=time.monotonic(),
         )
         with self._lock:
+            existing = self.tenants.get(tenant_id)
+            if existing is not None and existing.state not in (
+                REJECTED, FINISHED,
+            ):
+                raise PlanError(
+                    f"tenant {tenant_id!r} already submitted", field="tenant")
+            # a terminal record is replaced: a rejected tenant may resubmit
+            # a smaller plan under the same id
             self.tenants[tenant_id] = tenant
-            if projected > self.budget.total_s:
-                # can NEVER fit, queueing would deadlock the drain
+            if projected > self._never_fit_bound():
                 tenant.state = REJECTED
-                tenant.reason = (
-                    f"projected cost {projected:.1f}s exceeds the total "
-                    f"budget {self.budget.total_s:.1f}s")
+                tenant.reason = self._never_fit_reason(projected)
             elif self.budget.debit(projected):
                 self._admit(tenant)
             elif svc.queue_on_reject:
@@ -250,6 +268,20 @@ class SearchService:
                     "(set service.queue_on_reject to wait for capacity)")
         return tenant
 
+    def _never_fit_bound(self) -> float:
+        """The most headroom this budget can EVER offer again: ``total −
+        spent``.  ``spent_s`` is never credited back, so the bound is
+        monotonically non-increasing — a projection above it can never be
+        admitted and queueing it would deadlock the drain.  Caller holds
+        the lock."""
+        return self.budget.total_s - self.budget.spent_s
+
+    def _never_fit_reason(self, projected: float) -> str:
+        return (
+            f"projected cost {projected:.1f}s can never fit: it exceeds "
+            f"the total budget {self.budget.total_s:.1f}s minus settled "
+            f"spend {self.budget.spent_s:.1f}s")
+
     def _admit(self, tenant: Tenant) -> None:
         """Install an already-debited tenant onto the driver (caller holds
         the service lock; lock order is service → driver, never back)."""
@@ -259,20 +291,30 @@ class SearchService:
             base_max_steps=tenant.plan.max_steps,
             select_id=tenant.select_id,
         )
+        tenant.row_obj = self.driver.rows[tenant.row]
         tenant.state = RUNNING
 
     def _admit_queued(self) -> None:
         """Admit parked plans in (priority, FIFO) order.  Strictly: the
         head blocks the tail, so a large high-priority plan is never
-        starved by small late arrivals slipping past it."""
+        starved by small late arrivals slipping past it.  A head whose
+        projection no longer fits ``total − spent`` (earlier tenants'
+        settled spend shrank the ceiling since it was parked) is rejected
+        rather than left to block the queue — and the drain — forever."""
         with self._lock:
             self._queue.sort(key=lambda t: (-t.service.priority, t.seq))
             while self._queue:
                 head = self._queue[0]
-                if not self.budget.debit(head.projected_s):
-                    break
-                self._queue.pop(0)
-                self._admit(head)
+                if self.budget.debit(head.projected_s):
+                    self._queue.pop(0)
+                    self._admit(head)
+                    continue
+                if head.projected_s > self._never_fit_bound():
+                    self._queue.pop(0)
+                    head.state = REJECTED
+                    head.reason = self._never_fit_reason(head.projected_s)
+                    continue
+                break
 
     # ---- pump --------------------------------------------------------------
 
@@ -285,22 +327,26 @@ class SearchService:
         return merged
 
     def _reap(self) -> None:
-        """Harvest tenants whose row retired: capture the row object,
-        vacate its slot for reuse, settle the budget reservation against
-        the realized sampling cost."""
-        for tenant in self.tenants.values():
-            if tenant.state != RUNNING:
-                continue
-            row = self.driver.rows[tenant.row]
+        """Harvest tenants whose row retired: vacate the slot for reuse
+        and settle the budget reservation against the realized sampling
+        cost.  Iterates a snapshot taken under the lock — ``submit`` (any
+        thread) inserts into ``self.tenants`` concurrently, and a live
+        dict iteration here would RuntimeError and kill the pump thread."""
+        with self._lock:
+            running = [
+                t for t in self.tenants.values() if t.state == RUNNING
+            ]
+        for tenant in running:
+            row = tenant.row_obj          # bound at admission, never moves
             if row.active or row.inflight or row.vacant:
                 continue
-            tenant.row_obj = self.driver.vacate(tenant.row)
+            self.driver.vacate(tenant.row)
             tenant.actual_s = sampling_cost(
                 int(row.carry.step), self.rates
             ).total_s
             with self._lock:
                 self.budget.settle(tenant.projected_s, tenant.actual_s)
-            tenant.state = FINISHED
+                tenant.state = FINISHED
 
     def drain(self, deadline_s: float = 120.0) -> None:
         """Block until every queued/running tenant finishes.  With the
@@ -308,19 +354,38 @@ class SearchService:
         t0 = time.monotonic()
         while self.busy():
             if time.monotonic() - t0 > deadline_s:
+                with self._lock:
+                    unfinished = sum(
+                        t.state in (QUEUED, RUNNING)
+                        for t in self.tenants.values()
+                    )
                 raise TimeoutError(
                     f"drain exceeded {deadline_s}s with "
-                    f"{sum(t.state in (QUEUED, RUNNING) for t in self.tenants.values())} "
-                    "tenants unfinished")
+                    f"{unfinished} tenants unfinished")
             if self._pump is not None:
                 time.sleep(0.01)
             else:
                 self.tick()
 
     def busy(self) -> bool:
-        return any(
-            t.state in (QUEUED, RUNNING) for t in self.tenants.values()
-        )
+        with self._lock:
+            return any(
+                t.state in (QUEUED, RUNNING)
+                for t in self.tenants.values()
+            )
+
+    def evict_terminal(self) -> int:
+        """Drop FINISHED/REJECTED tenant records so a persistent service
+        doesn't accumulate them without bound; returns the count evicted.
+        Harvest ``stats()`` first — eviction discards the records."""
+        with self._lock:
+            dead = [
+                tid for tid, t in self.tenants.items()
+                if t.state in (FINISHED, REJECTED)
+            ]
+            for tid in dead:
+                del self.tenants[tid]
+            return len(dead)
 
     # ---- reporting ---------------------------------------------------------
 

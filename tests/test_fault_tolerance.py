@@ -87,6 +87,28 @@ def test_heartbeat_registers_unknown_worker():
     assert mon.workers[7].inflight_since == 13.0
 
 
+def test_timestampless_registration_is_not_marked_dead():
+    """Regression: a worker absorbed from a timestamp-LESS completion or
+    assignment used to be registered with last_heartbeat=0.0 — on a
+    monotonic clock the very next sweep read that as ``now − 0.0`` of
+    silence, declared the worker DEAD and re-issued its cohort, the
+    opposite of absorb-don't-raise.  Liveness must stay unknown (and the
+    worker untouched) until a real heartbeat arrives."""
+    mon = HeartbeatMonitor(dead_after_s=120.0)
+    mon.record_completion(9, latency=2.0)      # legacy caller: no clock
+    mon.assign(9, cohort=11)                   # still no clock
+    out = mon.sweep(now=10_000.0)
+    assert 9 not in out["dead"] and 9 not in out["suspect"]
+    assert 11 not in out["reissue_cohorts"]
+    assert mon.workers[9].state is WorkerState.HEALTHY
+    assert mon.workers[9].last_heartbeat is None
+    # the first real heartbeat starts normal liveness tracking
+    mon.heartbeat(9, now=10_000.0)
+    out = mon.sweep(now=10_200.0)
+    assert 9 in out["dead"]
+    assert out["reissue_cohorts"] == [11]      # death re-issues in-flight
+
+
 def test_restart_policy():
     p = RestartPolicy(max_restarts=2)
     assert p.should_restart(0) and p.should_restart(1)

@@ -198,6 +198,103 @@ def test_queued_tenants_admit_by_priority_when_capacity_frees(world):
     assert hi.row_obj.admitted_s < lo.row_obj.admitted_s
 
 
+def test_queued_plan_that_can_never_fit_is_rejected_not_stuck(world):
+    """Regression: ``spent_s`` is never credited back, so a parked plan
+    whose projection exceeds ``total − spent`` can never be admitted.  It
+    used to sit QUEUED forever once earlier tenants settled their spend —
+    ``busy()`` stayed True and ``drain()`` span to TimeoutError.  The pump
+    must re-reject it the moment the shrunken ceiling rules it out."""
+    _, chunks, det = world
+    svc = _service(chunks, det, budget_s=1000 * FRAME_S)
+    # `a` fits and will exhaust its whole 600-frame budget (limit is
+    # unreachable), settling spent_s ≈ 600 frames
+    a = svc.submit("a", _plan(max_steps=600, limit=64), key=_qkey(0))
+    b = svc.submit(
+        "b", _plan(max_steps=600, limit=3,
+                   service=ServiceConfig(queue_on_reject=True)),
+        key=_qkey(1))
+    assert a.state == RUNNING and b.state == QUEUED
+    _drain_sync(svc, deadline_s=60.0)          # pre-fix: TimeoutError here
+    assert a.state == FINISHED
+    assert int(a.row_obj.carry.step) == 600    # spend settled at 600 frames
+    # after settling, total − spent = 400 frames < b's 600-frame projection
+    assert b.state == REJECTED and "never fit" in b.reason
+    assert svc.budget.committed_s == pytest.approx(0.0)
+
+
+def test_rejected_tenant_can_resubmit_under_same_id(world):
+    """A rejection is terminal for the PLAN, not the tenant id: the same
+    tenant may come back with a smaller plan (and a finished id may be
+    reused), while QUEUED/RUNNING ids stay exclusive."""
+    _, chunks, det = world
+    svc = _service(chunks, det, budget_s=1000 * FRAME_S)
+    r = svc.submit("a", _plan(max_steps=100_000), key=_qkey(0))
+    assert r.state == REJECTED
+    t = svc.submit("a", _plan(max_steps=500, limit=3), key=_qkey(0))
+    assert t.state == RUNNING
+    with pytest.raises(PlanError, match="already submitted"):
+        svc.submit("a", _plan(max_steps=500, limit=3), key=_qkey(0))
+    _drain_sync(svc)
+    assert t.state == FINISHED
+    again = svc.submit("a", _plan(max_steps=500, limit=3), key=_qkey(1))
+    assert again.state == RUNNING
+    _drain_sync(svc)
+    assert again.state == FINISHED
+    # the service keeps ONE record per id: the latest generation
+    assert svc.tenants["a"] is again
+    # terminal records can be evicted so a persistent service stays bounded
+    assert svc.evict_terminal() == 1
+    assert not svc.tenants and not svc.busy()
+
+
+def test_running_tenant_slo_visible_before_retire(world):
+    """Regression: SLO attainment must be visible for in-flight tenants —
+    the driver stamps ``first_result_s`` at the merge, but the report used
+    to read a ``row_obj`` only bound at reap time, so a RUNNING tenant
+    whose first result had already merged reported ``ttfr_s=None``."""
+    _, chunks, det = world
+    svc = _service(chunks, det)
+    t = svc.submit(
+        "a", _plan(max_steps=1500, limit=64,
+                   service=ServiceConfig(slo_latency_s=300.0)),
+        key=_qkey(0))
+    svc.start(pump=False)
+    for _ in range(200):
+        svc.tick(timeout=5.0)
+        if t.state != RUNNING or t.row_obj.first_result_s:
+            break
+    assert t.state == RUNNING              # limit 64 is not hit this fast
+    rep = t.slo_report()
+    assert rep["ttfr_s"] is not None and rep["ttfr_s"] > 0
+    assert rep["slo_met"] is True
+    assert t.to_dict()["results"] >= 1     # live progress, same binding
+    svc.drain()
+    svc.stop()
+    assert t.state == FINISHED
+
+
+def test_concurrent_submits_race_the_background_pump(world):
+    """Regression: the pump's ``_reap``/``busy`` used to iterate the live
+    ``self.tenants`` dict while ``submit`` (another thread) inserted under
+    the lock — a mid-iteration insert raised ``RuntimeError: dictionary
+    changed size during iteration``, silently killing the pump so nothing
+    ever retired and drain timed out.  Both now iterate locked snapshots;
+    submitting against a hot pump must drain cleanly."""
+    _, chunks, det = world
+    svc = _service(chunks, det)
+    svc.start(pump=True)
+    try:
+        tenants = [
+            svc.submit(f"t{i}", _plan(max_steps=60, limit=2), key=_qkey(i))
+            for i in range(12)
+        ]
+        svc.drain(deadline_s=60.0)
+    finally:
+        svc.stop()
+    assert all(t.state == FINISHED for t in tenants)
+    assert svc.budget.committed_s == pytest.approx(0.0)
+
+
 # ---------------------------------------------------------------------------
 # Parity: multi-tenancy never perturbs a tenant's search
 # ---------------------------------------------------------------------------
