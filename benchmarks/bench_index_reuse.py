@@ -1,0 +1,125 @@
+"""Persistent repository index (DESIGN.md §13): cross-query reuse economics.
+
+The paper's sampler optimizes ONE query; a repository answers many over
+its lifetime, and every query today re-detects frames the repository has
+already paid for.  This bench measures what the persistent index buys:
+
+* **warm replay** — the identical query twice through the ``SearchPlan``
+  API with a snapshot directory between runs: run 2 preloads the device
+  cache from the host tier and must produce the IDENTICAL result count
+  with ≥5× fewer detector invocations (the headline gate; the
+  deterministic replay typically hits 100% and invokes the detector
+  zero times),
+* **warm service** — a second :class:`SearchService` constructed over
+  the index the first service's tenant populated (the process-restart
+  story): its tenant's per-tenant attributed detector economics must
+  show the same ≥5× saving, visible as ``index_hits``.
+
+Gates: identical result counts cold vs warm, warm detector invocations
+≤ cold/5 in BOTH scenarios.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+
+def main(quick: bool = False) -> None:
+    from repro.configs.exsample_paper import dashcam
+    from repro.core import (
+        Execution,
+        SearchPlan,
+        init_carry_multi,
+        init_matcher,
+        init_state,
+    )
+    from repro.core.plan import IndexSpec
+    from repro.index import RepositoryIndex
+    from repro.serve.service import SearchService
+    from repro.sim import generate
+    from repro.sim.oracle import oracle_detect
+
+    scale = 0.02 if quick else 0.05
+    limit = 10 if quick else 25
+    max_steps = 1_500 if quick else 4_000
+    cohorts = 4
+    setup = dashcam(seed=0, scale=scale)
+    repo, chunks = generate(setup.repo)
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    print(f"repository: {chunks.total_frames:,} frames, "
+          f"{chunks.length.shape[0]} chunks (scale {scale})")
+
+    fresh = lambda: init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=512),
+        jnp.stack([jax.random.PRNGKey(0)]),
+    )
+
+    # ---- scenario 1: the identical query, cold then warm ----------------
+    with tempfile.TemporaryDirectory() as tmp:
+        spec = IndexSpec(path=tmp)
+        plan = lambda: SearchPlan(
+            result_limit=limit, max_steps=max_steps, cohorts=cohorts,
+            execution=Execution(queries_axis=True, cache=-1, index=spec),
+        )
+        cold = plan().run(fresh(), chunks, detector=det)
+        warm = plan().run(fresh(), chunks, detector=det)
+        c_inv = cold.stats.detector_invocations
+        w_inv = warm.stats.detector_invocations
+        print(f"cold run : {cold.results[0]} results / "
+              f"{cold.steps[0]:,} frames / {c_inv:,} detector invocations "
+              f"({cold.stats.persisted_detections:,} persisted)")
+        print(f"warm run : {warm.results[0]} results / "
+              f"{warm.steps[0]:,} frames / {w_inv:,} detector invocations "
+              f"({warm.stats.index_hits:,} index hits)")
+        assert warm.results[0] == cold.results[0], "replay must be exact"
+        assert c_inv >= 5 * max(w_inv, 1) or w_inv == 0, (
+            f"warm run must invoke the detector >=5x less: {c_inv} vs {w_inv}")
+        ratio = c_inv / w_inv if w_inv else float("inf")
+        print(f"GATE OK  : warm reuse {ratio:.0f}x "
+              f"({c_inv:,} -> {w_inv:,} invocations)")
+
+    # ---- scenario 2: second tenant over a warm service ------------------
+    index = RepositoryIndex(detector_version="v0")
+    svc_plan = SearchPlan(
+        result_limit=limit, max_steps=max_steps, cohorts=cohorts,
+        execution=Execution(queries_axis=True),
+    )
+
+    def run_tenant(tid, seed):
+        svc = SearchService(
+            fresh(), chunks, det, cohorts=cohorts, num_workers=2,
+            slots_per_batch=2, cache_frames=chunks.total_frames,
+            index=index,
+        )
+        tenant = svc.submit(tid, svc_plan, seed=seed)
+        svc.start(pump=False)
+        svc.drain()
+        svc.stop()
+        return tenant.to_dict()
+
+    t1 = run_tenant("cold-tenant", seed=1)   # populates the shared index
+    t2 = run_tenant("warm-tenant", seed=1)   # fresh service, warm index
+    print(f"tenant 1 : {t1['results']} results / "
+          f"{t1['detector_invocations']:,} fresh detections")
+    print(f"tenant 2 : {t2['results']} results / "
+          f"{t2['detector_invocations']:,} fresh detections / "
+          f"{t2['index_hits']:,} index hits")
+    assert t2["results"] == t1["results"]
+    assert t2["index_hits"] > 0
+    assert t1["detector_invocations"] >= 5 * max(
+        t2["detector_invocations"], 1
+    ) or t2["detector_invocations"] == 0, (
+        "second tenant over a warm service must save >=5x: "
+        f"{t1['detector_invocations']} vs {t2['detector_invocations']}")
+    ratio = (
+        t1["detector_invocations"] / t2["detector_invocations"]
+        if t2["detector_invocations"] else float("inf")
+    )
+    print(f"GATE OK  : warm-service reuse {ratio:.0f}x, "
+          f"index holds {len(index):,} detections")
+
+
+if __name__ == "__main__":
+    main()

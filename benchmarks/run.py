@@ -12,6 +12,9 @@
   bench_service      -- multi-tenant service: 2 admission waves × 4 tenants
                         on one live driver, budget ledger + slot reuse
                         (DESIGN.md §12)
+  bench_index_reuse  -- persistent repository index: identical query cold
+                        vs warm + second tenant over a warm service, ≥5×
+                        fewer detector invocations (DESIGN.md §13)
   bench_overhead     -- paper Fig. 6 (phase breakdown; surrogate fixed costs)
   bench_kernels      -- kernel reference microbenchmarks (CSV)
   bench_roofline     -- Roofline table from dry-run artifacts
@@ -86,6 +89,7 @@ def _sections() -> list[BenchSpec]:
         bench_batched,
         bench_bias,
         bench_chunking,
+        bench_index_reuse,
         bench_kernels,
         bench_multiquery,
         bench_overhead,
@@ -119,6 +123,10 @@ def _sections() -> list[BenchSpec]:
         BenchSpec("service(sec12)",
                   lambda quick: bench_service.main(quick=quick),
                   execution=Execution(queries_axis=True, async_workers=4,
+                                      cache=-1)),
+        BenchSpec("index_reuse(sec13)",
+                  lambda quick: bench_index_reuse.main(quick=quick),
+                  execution=Execution(queries_axis=True, async_workers=2,
                                       cache=-1)),
         BenchSpec("overhead(fig6)", lambda quick: bench_overhead.main()),
         BenchSpec("kernels", lambda quick: bench_kernels.main()),

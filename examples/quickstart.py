@@ -13,11 +13,21 @@ an ``Execution(...)`` change, not a different API.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import jax
+import jax.numpy as jnp
 
 from repro.configs.exsample_paper import dashcam
-from repro.core import SearchPlan, init_carry, init_matcher, init_state
+from repro.core import (
+    SearchPlan,
+    init_carry,
+    init_carry_multi,
+    init_matcher,
+    init_state,
+)
 from repro.core.baselines import FrameSchedule, run_schedule
+from repro.core.plan import Execution, IndexSpec
 from repro.sim import generate
 from repro.sim.oracle import oracle_detect
 from repro.sim.costmodel import CostRates, sampling_cost
@@ -60,6 +70,29 @@ def main():
           f"(~{sampling_cost(int(rp.step), rates).total_s:.0f} gpu·s)")
     print(f"savings  : {int(rp.step) / max(ex_steps, 1):.2f}x fewer frames")
     print("\nrecall trace (frames, results):", res.trace[:8], "...")
+
+    # Warm restart (DESIGN.md §13): point the plan at a persistent index
+    # and detections survive the run — the second, identical search
+    # preloads its detection cache from the snapshot and answers from
+    # disk instead of re-paying the detector for frames the repository
+    # has already scored.
+    fresh_multi = lambda: init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=1024),
+        jnp.stack([jax.random.PRNGKey(0)]),
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        warm_plan = SearchPlan(
+            result_limit=40, max_steps=20_000, cohorts=8,
+            execution=Execution(
+                queries_axis=True, cache=-1, index=IndexSpec(path=tmp),
+            ),
+        )
+        cold = warm_plan.run(fresh_multi(), chunks, detector=detector)
+        warm = warm_plan.run(fresh_multi(), chunks, detector=detector)
+        print(f"\nwarm restart: {cold.stats.detector_invocations:,} detector "
+              f"invocations cold -> {warm.stats.detector_invocations:,} warm "
+              f"({warm.stats.index_hits:,} index hits, "
+              f"{cold.stats.persisted_detections:,} persisted)")
 
 
 if __name__ == "__main__":

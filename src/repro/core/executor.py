@@ -60,6 +60,12 @@ class SearchStats:
       :class:`~repro.core.matcher.ResultLog` at merge boundaries (the
       async lowerings' spill contract, DESIGN.md §11).
     * ``matcher_inserted`` / ``matcher_capacity`` — final ring totals.
+    * ``index_hits`` / ``persisted_detections`` / ``warm_rounds_saved`` —
+      repository-index economics (DESIGN.md §13): cache hits served by
+      the index preload (detector calls a PAST search paid for — a subset
+      of ``cache_hits``), fresh detections persisted into the index at
+      the end of the run, and the rounds of cold-start exploration the
+      Thompson warm-start priors replaced.
     """
 
     detector_invocations: int = 0
@@ -74,6 +80,9 @@ class SearchStats:
     results_spilled: int = 0
     matcher_inserted: int = 0
     matcher_capacity: int = 0
+    index_hits: int = 0
+    persisted_detections: int = 0
+    warm_rounds_saved: int = 0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -130,6 +139,8 @@ def tenant_stats_from_row(row) -> SearchStats:
         rounds=int(row.rounds),
         frames_sampled=int(np.asarray(row.carry.step)),
         results_spilled=len(row.log),
+        index_hits=int(getattr(row, "index_hits", 0)),
+        warm_rounds_saved=int(getattr(row, "warm_rounds_saved", 0)),
         **_matcher_totals(row.carry),
     )
 
@@ -158,6 +169,7 @@ class LoweredPlan:
         detector: DetectorFn,
         select: SelectFn | None = None,
         mesh=None,
+        index=None,
     ) -> SearchResult:
         p, ex = self.plan, self.plan.execution
         multi = self.kind in ("multi", "multi_sharded", "async_multi")
@@ -190,6 +202,70 @@ class LoweredPlan:
             limits = (p.result_limit,) * p.queries
         limit0 = int(limits[0])
 
+        # ---- repository index (DESIGN.md §13): open / version-check /
+        # Thompson warm-start / device-cache preload --------------------
+        spec = ex.index
+        if index is None and spec is not None:
+            from repro.index.store import RepositoryIndex
+
+            index = RepositoryIndex.open(spec)
+        elif (
+            index is not None and spec is not None
+            and spec.detector_version != index.detector_version
+        ):
+            raise PlanError(
+                f"plan declares index.detector_version="
+                f"{spec.detector_version!r} but the live index holds "
+                f"{index.detector_version!r} — a version mismatch must be "
+                "a clean miss, not a silent replay", field="detector_version")
+        prior_weight = (
+            spec.prior_weight if spec is not None
+            else (index.prior_weight if index is not None else 0.0)
+        )
+        warm_rounds_saved = 0
+        if index is not None and prior_weight > 0:
+            warmed, equiv = index.priors.warm_sampler(
+                carry.sampler, None, prior_weight
+            )
+            if equiv:
+                carry = dataclasses.replace(carry, sampler=warmed)
+                warm_rounds_saved = int(equiv) // max(p.cohorts, 1)
+        if index is not None:
+            # evidence base AFTER the warm boost, so recorded deltas never
+            # re-count injected priors as fresh evidence
+            n1_base = np.asarray(carry.sampler.n1, np.float64)
+            n_base = np.asarray(carry.sampler.n, np.float64)
+        warm_cache = warm_tag = None
+        if index is not None and cache and self.kind in (
+            "multi", "multi_sharded"
+        ):
+            struct = jax.eval_shape(
+                detector, jax.random.PRNGKey(0), jnp.zeros((), jnp.int32)
+            )
+            warm_cache, _warm = index.warm(struct, cache)
+            warm_tag = warm_cache.tag
+
+        def finish(out, traces, stats, final_cache=None, index_hits=0):
+            """Index write-back tail shared by every lowering branch."""
+            if index is not None:
+                persisted = 0
+                if not index.read_only:
+                    persisted = index.publish_cache(final_cache)
+                    index.priors.record(
+                        None,
+                        np.asarray(out.sampler.n1, np.float64) - n1_base,
+                        np.asarray(out.sampler.n, np.float64) - n_base,
+                    )
+                    if index.path is not None:
+                        index.save()
+                stats = dataclasses.replace(
+                    stats,
+                    index_hits=int(index_hits),
+                    persisted_detections=int(persisted),
+                    warm_rounds_saved=warm_rounds_saved,
+                )
+            return self._package(out, traces, stats)
+
         if self.kind in ("host", "scan"):
             fn = _host_search if self.kind == "host" else _scan_search
             out, trace = fn(
@@ -202,7 +278,7 @@ class LoweredPlan:
                 detector_invocations=step, frames_sampled=step,
                 **_matcher_totals(out),
             )
-            return self._package(out, [trace], stats)
+            return finish(out, [trace], stats)
 
         if self.kind == "async":
             from repro.core.runtime import AsyncSearchDriver
@@ -223,7 +299,7 @@ class LoweredPlan:
                 results_spilled=int(driver.stats["spilled"]),
                 **_matcher_totals(out),
             )
-            return self._package(out, [[(step, int(out.results))]], stats)
+            return finish(out, [[(step, int(out.results))]], stats)
 
         if self.kind == "async_multi":
             from repro.core.runtime import AsyncMultiSearchDriver
@@ -234,6 +310,7 @@ class LoweredPlan:
                 result_limits=[int(v) for v in limits],
                 max_steps=p.max_steps, method=self.method, select=select,
                 cache_frames=cache or 0, trace_every=p.trace_every,
+                index=index,
             )
             out = driver.run()
             stats = SearchStats(
@@ -248,7 +325,10 @@ class LoweredPlan:
                 results_spilled=int(driver.stats["spilled"]),
                 **_matcher_totals(out),
             )
-            return self._package(out, driver.traces, stats)
+            return finish(
+                out, driver.traces, stats, final_cache=driver.cache,
+                index_hits=int(driver.stats.get("index_hits", 0)),
+            )
 
         if mesh is None:
             if ex.axis != "data":
@@ -282,7 +362,7 @@ class LoweredPlan:
                 merges=sh["merges"],
                 **_matcher_totals(out),
             )
-            return self._package(out, [trace], stats)
+            return finish(out, [trace], stats)
 
         limits_arr = jnp.asarray([int(v) for v in limits], jnp.int32)
         if self.kind == "multi":
@@ -291,6 +371,7 @@ class LoweredPlan:
                 max_steps=p.max_steps, cohorts=p.cohorts, method=self.method,
                 trace_every=p.trace_every, select=select,
                 cache_frames=cache or 0,
+                cache=warm_cache, warm_tag=warm_tag,
             )
         else:  # multi_sharded — the composed lowering
             out, traces, ms = run_search_multi_sharded(
@@ -298,6 +379,7 @@ class LoweredPlan:
                 result_limits=limits_arr, max_steps=p.max_steps,
                 cohorts=p.cohorts, sync_every=ex.sync_every, axis=ex.axis,
                 cache_frames=cache or 0,
+                cache=warm_cache, warm_tag=warm_tag,
             )
         stats = SearchStats(
             detector_invocations=ms["detector_invocations"],
@@ -309,7 +391,10 @@ class LoweredPlan:
             merges=ms.get("merges", 0),
             **_matcher_totals(out),
         )
-        return self._package(out, traces, stats)
+        return finish(
+            out, traces, stats, final_cache=ms.get("final_cache"),
+            index_hits=int(ms.get("index_hits", 0)),
+        )
 
     def _package(self, out, traces, stats) -> SearchResult:
         steps = tuple(int(s) for s in np.atleast_1d(np.asarray(out.step)))
@@ -345,6 +430,7 @@ def _search_multi_sharded_device(
     chunks: ChunkIndex,      # replicated
     result_limits: jax.Array,  # i32[Q]
     cache,                   # DetectionCache or None — replicated, per-shard
+    warm_tag,                # i32[S] index-preload tag snapshot, or None
     *,
     mesh,
     axis: str,
@@ -402,7 +488,7 @@ def _search_multi_sharded_device(
     cap_r = matcher.times_seen.shape[-1]
 
     def shard_fn(keys, step0, results0, n1_l, n_l, frames_l, matcher0,
-                 chks, rlimits, cache0):
+                 chks, rlimits, cache0, wtag):
         shard_id = jax.lax.axis_index(axis)
         fdt = n_l.dtype
         qi = jnp.arange(q_n, dtype=jnp.int32)
@@ -419,7 +505,7 @@ def _search_multi_sharded_device(
 
         def one_round(base_n1, base_n, active, rstate):
             keys, delta_n1, delta_n, foreign, matcher, cache, lstep, lres, \
-                lcalls, lhits = rstate
+                lcalls, lhits, lihits = rstate
             ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
             key_next, k_choice, k_det = ks[:, 0], ks[:, 1], ks[:, 2]
             # per-query view: authoritative slice + own pending deltas (the
@@ -509,6 +595,13 @@ def _search_multi_sharded_device(
             dets_flat = jax.tree.map(lambda x: x[first_idx], resolved)
             lcalls = lcalls + jnp.sum(need).astype(jnp.int32)
             lhits = lhits + jnp.sum(is_rep & hit).astype(jnp.int32)
+            if wtag is not None:
+                # index hits: cache hits whose slot still tags the frame
+                # the repository-index preload installed (DESIGN.md §13)
+                wslot = flat_frames % wtag.shape[0]
+                lihits = lihits + jnp.sum(
+                    is_rep & hit & (wtag[wslot] == flat_frames)
+                ).astype(jnp.int32)
             dets_q = jax.tree.map(
                 lambda x: x.reshape((q_n, per_shard) + x.shape[1:]),
                 dets_flat,
@@ -559,11 +652,11 @@ def _search_multi_sharded_device(
                 key_next, keys,
             )
             return (keys, delta_n1, delta_n, foreign, matcher, cache,
-                    lstep, lres, lcalls, lhits)
+                    lstep, lres, lcalls, lhits, lihits)
 
         def body(st):
             (keys, n1_l, n_l, matcher, snap, cache, step, results, buf, tn,
-             wcalls, whits, hw, ov, windows, _cont) = st
+             wcalls, whits, wihits, hw, ov, windows, _cont) = st
             active = live_mask(step, results, n_l)               # [Q]
             rst = (
                 keys,
@@ -576,9 +669,10 @@ def _search_multi_sharded_device(
                 jnp.zeros((q_n,), jnp.int32),
                 wcalls,
                 whits,
+                wihits,
             )
             keys, dn1, dn, _foreign, matcher, cache, lstep, lres, wcalls, \
-                whits = jax.lax.fori_loop(
+                whits, wihits = jax.lax.fori_loop(
                     0, sync_every, lambda r, s: one_round(n1_l, n_l, active, s),
                     rst,
                 )
@@ -628,7 +722,8 @@ def _search_multi_sharded_device(
             tn = jnp.minimum(tn + active.astype(jnp.int32), cap)
             cont = jnp.any(live_mask(step, results, n_l))
             return (keys, n1_l, n_l, merged, merged, cache, step, results,
-                    buf, tn, wcalls, whits, hw, ov, windows + 1, cont)
+                    buf, tn, wcalls, whits, wihits, hw, ov, windows + 1,
+                    cont)
 
         cont0 = jnp.any(live_mask(step0, results0, n_l))
         init = (
@@ -636,11 +731,12 @@ def _search_multi_sharded_device(
             jnp.zeros((q_n, cap, 2), jnp.int32),
             jnp.zeros((q_n,), jnp.int32),
             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32), jnp.zeros((), bool),
             jnp.zeros((), jnp.int32), cont0,
         )
-        (keys, n1_l, n_l, matcher, _snap, _cache, step, results, buf, tn,
-         wcalls, whits, hw, ov, windows, _c) = jax.lax.while_loop(
+        (keys, n1_l, n_l, matcher, _snap, cache_f, step, results, buf, tn,
+         wcalls, whits, wihits, hw, ov, windows, _c) = jax.lax.while_loop(
             lambda st: st[-1], body, init
         )
         # final per-query checkpoint only where the trace would otherwise
@@ -654,20 +750,31 @@ def _search_multi_sharded_device(
         tn = jnp.clip(tn, 1, cap)
         calls = jax.lax.psum(wcalls, axis)
         hits = jax.lax.psum(whits, axis)
-        return (n1_l, n_l, matcher, keys, step, results, buf, tn, calls,
-                hits, hw, ov, windows)
+        ihits = jax.lax.psum(wihits, axis)
+        outs = (n1_l, n_l, matcher, keys, step, results, buf, tn, calls,
+                hits, ihits, hw, ov, windows)
+        if cache_f is not None:
+            # the per-shard caches are replicas (all-gathered inserts), so
+            # returning one with a replicated spec is exact — the executor
+            # publishes it into the repository index after the run
+            outs = outs + (cache_f,)
+        return outs
 
     sh2, rep = P(None, axis), P()
+    out_specs = (
+        sh2, sh2, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep,
+        rep,
+    )
+    if cache is not None:
+        out_specs = out_specs + (rep,)
     return get_shard_map()(
         shard_fn,
         mesh=mesh,
-        in_specs=(rep, rep, rep, sh2, sh2, sh2, rep, rep, rep, rep),
-        out_specs=(
-            sh2, sh2, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep
-        ),
+        in_specs=(rep, rep, rep, sh2, sh2, sh2, rep, rep, rep, rep, rep),
+        out_specs=out_specs,
         check_rep=False,
     )(keys, step0, results0, n1, n, frames, matcher, chunks, result_limits,
-      cache)
+      cache, warm_tag)
 
 
 def run_search_multi_sharded(
@@ -683,6 +790,8 @@ def run_search_multi_sharded(
     axis: str = "data",
     select: SelectFn | None = None,
     cache_frames: int = 0,
+    cache=None,
+    warm_tag=None,
 ):
     """Q concurrent queries × an M-sharded mesh, one deduplicated detector
     pass per round per shard (DESIGN.md §10) — the composed lowering behind
@@ -695,6 +804,11 @@ def run_search_multi_sharded(
     exhausted dummies and trimmed on the way out.  Returns
     ``(carries', traces, stats)`` with the same per-query trace semantics
     as the solo sharded driver and §9-style sharing stats.
+
+    ``cache`` overrides internal cache construction (a repository-index
+    preload, DESIGN.md §13); ``warm_tag`` — the preload's tag snapshot —
+    splits ``index_hits`` out of ``cache_hits``.  Whenever a cache is in
+    play its final state rides back in ``stats["final_cache"]``.
     """
     num_shards = mesh.shape[axis]
     if cohorts is None:
@@ -713,18 +827,15 @@ def run_search_multi_sharded(
     padded = pad_chunks(carries.sampler, num_shards)
     n1, n, frames = padded.n1, padded.n, padded.frames
 
-    if cache_frames:
+    if cache is None and cache_frames:
         from repro.serve.batcher import init_detection_cache
 
         struct = jax.eval_shape(
             detector, jax.random.PRNGKey(0), jnp.zeros((), jnp.int32)
         )
         cache = init_detection_cache(struct, cache_frames)
-    else:
-        cache = None
 
-    (n1_out, n_out, matcher, keys, step, results, buf, tn, calls, hits, hw,
-     ov, windows) = _search_multi_sharded_device(
+    outs = _search_multi_sharded_device(
         carries.key,
         carries.step,
         carries.results,
@@ -737,6 +848,7 @@ def run_search_multi_sharded(
             jnp.asarray(result_limits, jnp.int32), (q_n,)
         ),
         cache,
+        warm_tag,
         mesh=mesh,
         axis=axis,
         detector=detector,
@@ -747,6 +859,9 @@ def run_search_multi_sharded(
         alpha0=carries.sampler.alpha0,
         beta0=carries.sampler.beta0,
     )
+    (n1_out, n_out, matcher, keys, step, results, buf, tn, calls, hits,
+     ihits, hw, ov, windows) = outs[:14]
+    final_cache = outs[14] if cache is not None else None
     out = ExSampleCarry(
         sampler=dataclasses.replace(
             carries.sampler,
@@ -768,10 +883,12 @@ def run_search_multi_sharded(
     stats = {
         "detector_invocations": int(calls),
         "cache_hits": int(hits),
+        "index_hits": int(ihits),
         "rounds": int(windows) * sync_every,
         "frames_sampled": int(np.asarray(out.step).sum()),
         "merge_high_water": int(hw),
         "merge_overflow": bool(ov),
         "merges": int(windows),
+        "final_cache": final_cache,
     }
     return out, traces, stats

@@ -908,16 +908,19 @@ def _multi_round(
     scheduler (DESIGN.md §11) runs at issue / process time, so the
     resident loop and the async workers share one round body.
 
-    Returns ``(mc', cache', fresh_detections i32[], cache_hits i32[])`` —
-    ``fresh_detections`` counts what a real deployment would actually send
-    through the detector this round (unique, uncached, live frames); the
-    simulator still evaluates the full padded batch for static shapes.
+    Returns ``(mc', cache', fresh_detections i32[], cache_hits i32[],
+    aux)`` — ``fresh_detections`` counts what a real deployment would
+    actually send through the detector this round (unique, uncached, live
+    frames); the simulator still evaluates the full padded batch for
+    static shapes.  ``aux`` is the round's :class:`RoundAux` (the resident
+    loop uses it to attribute cache hits to a warm repository-index
+    preload, DESIGN.md §13).
     """
     choice = multi_round_choose(mc, chunks, cohorts=cohorts, method=method)
-    mc, cache, fresh_calls, cache_hits, _aux = multi_round_process(
+    mc, cache, fresh_calls, cache_hits, aux = multi_round_process(
         mc, cache, chunks, active, choice, detector=detector, select=select,
     )
-    return mc, cache, fresh_calls, cache_hits
+    return mc, cache, fresh_calls, cache_hits, aux
 
 
 @partial(
@@ -931,6 +934,7 @@ def _search_multi_device(
     chunks: ChunkIndex,
     result_limits: jax.Array,    # i32[Q]
     cache,
+    warm_tag,                    # i32[S] index-preload tag snapshot, or None
     *,
     detector: DetectorFn,
     select: SelectFn | None,
@@ -942,7 +946,14 @@ def _search_multi_device(
     """Device-resident multi-query loop: runs rounds until EVERY query is
     finished; per query the continue / trace semantics mirror
     ``_search_scan_device`` exactly (same cap formula, boundary-crossing
-    checkpoints, unconditional final entry)."""
+    checkpoints, unconditional final entry).
+
+    ``warm_tag`` is a snapshot of the cache tag as the repository index
+    preloaded it (DESIGN.md §13): a cache hit whose slot still tags the
+    preloaded frame is an INDEX hit (a detector call a past search paid
+    for), counted separately from within-run reuse.  Eviction-correct by
+    construction — an evicted preload cannot hit at all, and a colliding
+    run-inserted frame fails the ``warm_tag`` compare."""
     q_n = mc.step.shape[0]
     cap = (max_steps + cohorts - 1) // trace_every + 1 if trace_every else 1
     buf0 = jnp.zeros((q_n, cap, 2), jnp.int32)
@@ -960,12 +971,16 @@ def _search_multi_device(
         return jnp.any(live_mask(state[0]))
 
     def body(state):
-        c, cache, buf, n, calls, hits, rounds = state
+        c, cache, buf, n, calls, hits, ihits, rounds = state
         active = live_mask(c)
-        c2, cache, fresh, hit = _multi_round(
+        c2, cache, fresh, hit, aux = _multi_round(
             c, cache, chunks, active,
             detector=detector, select=select, cohorts=cohorts, method=method,
         )
+        if warm_tag is not None:
+            wslot = aux.flat_frames % warm_tag.shape[0]
+            whit = aux.rep_hit & (warm_tag[wslot] == aux.flat_frames)
+            ihits = ihits + jnp.sum(whit).astype(jnp.int32)
         if trace_every:
             crossed = (c2.step // trace_every) > (c.step // trace_every)
             entry = jnp.stack([c2.step, c2.results], axis=-1)   # [Q, 2]
@@ -974,17 +989,17 @@ def _search_multi_device(
                 buf, idx, entry
             )
             n = n + crossed.astype(jnp.int32)
-        return c2, cache, buf, n, calls + fresh, hits + hit, rounds + 1
+        return c2, cache, buf, n, calls + fresh, hits + hit, ihits, rounds + 1
 
-    c, cache, buf, n, calls, hits, rounds = jax.lax.while_loop(
-        cond, body, (mc, cache, buf0, n0, z32, z32, z32)
+    c, cache, buf, n, calls, hits, ihits, rounds = jax.lax.while_loop(
+        cond, body, (mc, cache, buf0, n0, z32, z32, z32, z32)
     )
     final = jnp.stack([c.step, c.results], axis=-1)
     buf = jax.vmap(lambda bq, i, e: bq.at[i].set(e, mode="drop"))(
         buf, jnp.minimum(n, cap - 1), final
     )
     n = jnp.minimum(n + 1, cap)
-    return c, buf, n, calls, hits, rounds
+    return c, cache, buf, n, calls, hits, ihits, rounds
 
 
 def _multi_search(
@@ -999,6 +1014,8 @@ def _multi_search(
     trace_every: int = 0,
     select: SelectFn | None = None,
     cache_frames: int = 0,
+    cache=None,
+    warm_tag=None,
 ):
     """Q concurrent queries over one repository, one decode/detect pass per
     round (DESIGN.md §9).
@@ -1029,25 +1046,30 @@ def _multi_search(
     ``detector_invocations`` (unique, uncached frames actually detected),
     ``cache_hits``, ``rounds``, ``frames_sampled`` (Σ per-query steps,
     what Q sequential runs would have paid).
+
+    ``cache`` overrides internal cache construction (a repository-index
+    preload, DESIGN.md §13) and ``warm_tag`` — the preloaded cache's tag
+    snapshot — splits ``index_hits`` out of ``cache_hits``; the final
+    cache rides back in ``stats["final_cache"]`` so the executor can
+    publish fresh detections into the index.
     """
     q_n = int(carries.step.shape[0])
     limits = jnp.broadcast_to(
         jnp.asarray(result_limits, jnp.int32), (q_n,)
     )
-    if cache_frames:
+    if cache is None and cache_frames:
         from repro.serve.batcher import init_detection_cache
 
         struct = jax.eval_shape(
             detector, jax.random.PRNGKey(0), jnp.zeros((), jnp.int32)
         )
         cache = init_detection_cache(struct, cache_frames)
-    else:
-        cache = None
-    out, buf, n, calls, hits, rounds = _search_multi_device(
+    out, cache, buf, n, calls, hits, ihits, rounds = _search_multi_device(
         carries,
         chunks,
         limits,
         cache,
+        warm_tag,
         detector=detector,
         select=select,
         cohorts=cohorts,
@@ -1064,8 +1086,10 @@ def _multi_search(
     stats = {
         "detector_invocations": int(calls),
         "cache_hits": int(hits),
+        "index_hits": int(ihits),
         "rounds": int(rounds),
         "frames_sampled": int(np.asarray(out.step).sum()),
+        "final_cache": cache,
     }
     return out, traces, stats
 

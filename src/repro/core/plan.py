@@ -92,6 +92,45 @@ class ServiceConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Persistent repository-index binding riding on an :class:`Execution`
+    (DESIGN.md §13) — consumed by the executor (and the serving path) to
+    open / warm / write back a
+    :class:`~repro.index.store.RepositoryIndex`.
+
+    * ``path`` — snapshot directory (auto-loaded when it exists, saved at
+      the end of a writable run); ``None`` keeps the index in-memory.
+    * ``detector_version`` — the host tier is keyed by
+      ``(frame_id, detector_version)``, so a model upgrade is a clean
+      miss instead of replaying stale detections.
+    * ``read_only`` — consult the index but never publish or save.
+    * ``prior_weight`` — how many frames of accumulated past-search
+      evidence each chunk's Thompson prior is worth (0.0 = cold start,
+      bit-identical to a plan without an index).
+    """
+
+    path: Optional[str] = None
+    detector_version: str = "v0"
+    read_only: bool = False
+    prior_weight: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IndexSpec":
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise PlanValueError(
+                f"unknown IndexSpec option(s) {sorted(unknown)}; valid: "
+                f"{sorted(f.name for f in dataclasses.fields(cls))}",
+                field=sorted(unknown)[0],
+            )
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class Execution:
     """HOW a plan runs — the execution strategy half of the split.
 
@@ -116,6 +155,10 @@ class Execution:
       machinery (the cache lives on the shared detector pass).
     * ``service`` — optional :class:`ServiceConfig` per-tenant contract
       (SLO / priority / queue-on-reject); only the serving path reads it.
+    * ``index`` — optional :class:`IndexSpec` persistent repository-index
+      binding (DESIGN.md §13): the executor preloads the detection cache
+      from the index, writes fresh detections back at the end of the run
+      and warm-starts Thompson alphas by ``prior_weight``.
     """
 
     strategy: str = "auto"
@@ -126,11 +169,16 @@ class Execution:
     async_workers: int = 0
     cache: Optional[int] = None
     service: Optional[ServiceConfig] = None
+    index: Optional[IndexSpec] = None
 
     def __post_init__(self):
         if isinstance(self.service, dict):
             object.__setattr__(
                 self, "service", ServiceConfig.from_dict(self.service)
+            )
+        if isinstance(self.index, dict):
+            object.__setattr__(
+                self, "index", IndexSpec.from_dict(self.index)
             )
 
     def to_dict(self) -> dict:
@@ -148,6 +196,8 @@ class Execution:
             )
         if isinstance(d.get("service"), dict):
             d["service"] = ServiceConfig.from_dict(d["service"])
+        if isinstance(d.get("index"), dict):
+            d["index"] = IndexSpec.from_dict(d["index"])
         return cls(**d)
 
 
@@ -260,6 +310,27 @@ class SearchPlan:
                 raise PlanValueError(
                     f"service.priority={ex.service.priority!r} must be an "
                     "int (admission-queue ordering)", field="priority")
+        if ex.index is not None:
+            if not ex.index.detector_version or not isinstance(
+                ex.index.detector_version, str
+            ):
+                raise PlanValueError(
+                    f"index.detector_version="
+                    f"{ex.index.detector_version!r} must be a non-empty "
+                    "string (the host tier is keyed by it)",
+                    field="detector_version")
+            if ex.index.prior_weight < 0:
+                raise PlanValueError(
+                    f"index.prior_weight={ex.index.prior_weight} must be "
+                    ">= 0 (0 disables Thompson warm-start)",
+                    field="prior_weight")
+            if ex.index.path is not None and not isinstance(
+                ex.index.path, str
+            ):
+                raise PlanValueError(
+                    f"index.path={ex.index.path!r} must be a string "
+                    "snapshot directory or None (in-memory index)",
+                    field="path")
 
         # -- cross-option compatibility ------------------------------------
         multi = ex.queries_axis or self.queries > 1
@@ -371,11 +442,16 @@ class SearchPlan:
 
         return lower(self)
 
-    def run(self, carry, chunks, *, detector, select=None, mesh=None):
+    def run(self, carry, chunks, *, detector, select=None, mesh=None,
+            index=None):
         """``lower()`` + execute.  See
-        :meth:`repro.core.executor.LoweredPlan.run`."""
+        :meth:`repro.core.executor.LoweredPlan.run`.  ``index`` passes an
+        already-open :class:`~repro.index.store.RepositoryIndex` (e.g. a
+        service's shared instance) instead of opening one from
+        ``execution.index``."""
         return self.lower().run(
-            carry, chunks, detector=detector, select=select, mesh=mesh
+            carry, chunks, detector=detector, select=select, mesh=mesh,
+            index=index,
         )
 
     # ---- serde ------------------------------------------------------------

@@ -71,6 +71,7 @@ from repro.core.matcher import (
     eviction_mask,
     merge_matcher_checked,
 )
+from repro.core.state import SamplerState
 from repro.core.thompson import choose_chunks
 from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.serve.batcher import cache_insert, init_detection_cache
@@ -431,6 +432,8 @@ class _QueryRow:
     select_id: Optional[int] = None   # id passed to select() (default: row)
     fresh_calls: int = 0        # detector invocations attributed to this row
     cache_hits: int = 0         # cache hits attributed to this row
+    index_hits: int = 0         # cache hits served by index-warmed frames
+    warm_rounds_saved: int = 0  # prior-injection warm-up equivalent (rounds)
     admitted_s: float = 0.0     # monotonic wall-clock at admit/construction
     first_result_s: float = 0.0  # monotonic stamp of the first result merge
     finished_s: float = 0.0     # monotonic stamp at retire
@@ -495,6 +498,7 @@ class AsyncMultiSearchDriver:
         trace_every: int = 0,
         slots_per_batch: Optional[int] = None,
         straggler_factor: float = 4.0,
+        index=None,
     ):
         if jnp.ndim(carries.step) != 1:
             raise ValueError(
@@ -563,16 +567,30 @@ class AsyncMultiSearchDriver:
                 "window, which no spill can recover — raise max_results or "
                 "lower cohorts"
             )
+        self.index = index
+        self._warm_frames: frozenset = frozenset()
         if cache_frames:
-            self.cache = init_detection_cache(struct, cache_frames)
+            if index is not None:
+                # preload the device tier from the repository index — an
+                # empty tier yields a cache bit-identical to
+                # init_detection_cache (the cold-path contract, §13)
+                self.cache, self._warm_frames = index.warm(
+                    struct, cache_frames
+                )
+            else:
+                self.cache = init_detection_cache(struct, cache_frames)
         else:
             self.cache = None
+        self._warm_arr = (
+            np.asarray(sorted(self._warm_frames), np.int64)
+            if self._warm_frames else None
+        )
         # every counter exists from construction so LoweredPlan.run() can
         # package uniform SearchStats even for a run that never merged
         self.stats = {
             "slots": 0, "merges": 0, "reissues": 0, "duplicate_drops": 0,
             "merge_high_water": 0, "rounds": 0, "spilled": 0,
-            "detector_invocations": 0, "cache_hits": 0,
+            "detector_invocations": 0, "cache_hits": 0, "index_hits": 0,
             # detector-batch occupancy accounting (RequestBatcher semantics
             # over slot lanes): how many lanes of each emitted SlotBatch
             # carried a live query vs sentinel padding
@@ -631,6 +649,8 @@ class AsyncMultiSearchDriver:
         max_steps: Optional[int] = None,
         base_max_steps: Optional[int] = None,
         select_id: Optional[int] = None,
+        sampler_init: Optional[SamplerState] = None,
+        warm_rounds_saved: int = 0,
     ) -> int:
         """Join a fresh query mid-flight; returns its row index.
 
@@ -645,7 +665,12 @@ class AsyncMultiSearchDriver:
         tests/test_async_compose.py).  ``max_steps`` overrides the debit
         entirely.  ``select_id`` is handed to the ``select`` predicate in
         place of the row index (tenant→predicate binding, no recompile).
-        Vacated slots (``vacate``) are reused before the pool grows."""
+        ``sampler_init`` replaces the zeroed sampler statistics wholesale
+        (the index warm-start path: the service injects Thompson priors
+        and remains responsible for subtracting them back out when it
+        records evidence); ``warm_rounds_saved`` annotates the row's
+        accounting.  Vacated slots (``vacate``) are reused before the
+        pool grows."""
         proto = self.rows[0].carry
         m0 = proto.matcher
         fresh_matcher = dataclasses.replace(
@@ -663,6 +688,8 @@ class AsyncMultiSearchDriver:
         fresh_sampler = dataclasses.replace(
             s0, n1=jnp.zeros_like(s0.n1), n=jnp.zeros_like(s0.n)
         )
+        if sampler_init is not None:
+            fresh_sampler = sampler_init
         carry = ExSampleCarry(
             sampler=fresh_sampler,
             matcher=fresh_matcher,
@@ -681,6 +708,7 @@ class AsyncMultiSearchDriver:
                 carry=carry, limit=int(result_limit), budget=budget,
                 trace=[], log=ResultLog(), select_id=select_id,
                 admitted_s=time.monotonic(),
+                warm_rounds_saved=int(warm_rounds_saved),
             )
             slot = next(
                 (i for i, r in enumerate(self.rows) if r.vacant), None
@@ -782,12 +810,23 @@ class AsyncMultiSearchDriver:
             lanes_n = len(batch.query_rows)
             need_l = np.asarray(res.aux.need).reshape(lanes_n, -1)
             rep_hit_l = np.asarray(res.aux.rep_hit).reshape(lanes_n, -1)
+            if self._warm_arr is not None:
+                frames_l = np.asarray(res.aux.flat_frames).reshape(
+                    lanes_n, -1
+                )
+                warm_l = rep_hit_l & np.isin(frames_l, self._warm_arr)
+            else:
+                warm_l = None
             for lane, qrow in enumerate(batch.query_rows):
                 if not batch.active[lane]:
                     continue
                 row = self.rows[int(qrow)]
                 row.fresh_calls += int(need_l[lane].sum())
                 row.cache_hits += int(rep_hit_l[lane].sum())
+                if warm_l is not None:
+                    lane_ihits = int(warm_l[lane].sum())
+                    row.index_hits += lane_ihits
+                    self.stats["index_hits"] += lane_ihits
                 new_carry = jax.tree.map(
                     lambda x, lane=lane: x[lane], res.carry
                 )

@@ -57,10 +57,10 @@ class SimFrameStore:
 @dataclasses.dataclass(frozen=True)
 class ShardedFrameStore:
     """Multi-host wrapper: each host owns a contiguous stripe of frames and
-    fetches only local ids; remote ids resolve to zeros + a mask so callers
-    can all-gather payloads if (rarely) needed.  In the production layout
-    the scheduler routes cohorts to the host owning the frames, so remote
-    fetches never happen on the hot path."""
+    fetches only local ids; remote ids resolve to zeros + an explicit mask
+    so callers can all-gather payloads if (rarely) needed.  In the
+    production layout the scheduler routes cohorts to the host owning the
+    frames, so remote fetches never happen on the hot path."""
 
     inner: SimFrameStore
     host_id: int
@@ -72,10 +72,22 @@ class ShardedFrameStore:
         lo = self.host_id * stripe
         return (frame_ids >= lo) & (frame_ids < min(lo + stripe, total))
 
-    def fetch(self, frame_ids: jax.Array) -> jax.Array:
+    def local_mask(self, frame_ids: jax.Array) -> jax.Array:
+        """bool[B]: True where this host owns the frame.  The last host's
+        stripe may be short (``total % num_hosts != 0``); ids past the end
+        of the repository are local to no host."""
+        return self._local(jnp.atleast_1d(frame_ids))
+
+    def fetch(self, frame_ids: jax.Array):
+        """``(payload, local_mask)`` — zeroed payload lanes are now
+        DISTINGUISHABLE from genuinely-zero local embeddings: a remote id
+        returns ``mask[i] == False``, and callers that previously relied
+        on the silent zeroing can keep ``payload`` unchanged (it is
+        already masked) while gaining the explicit bit."""
         payload = self.inner.fetch(frame_ids)
         mask = self._local(jnp.atleast_1d(frame_ids))
-        return payload * mask[(...,) + (None,) * (payload.ndim - 1)]
+        masked = payload * mask[(...,) + (None,) * (payload.ndim - 1)]
+        return masked, mask
 
     def decode_cost(self, frame_ids: jax.Array) -> jax.Array:
         return self.inner.decode_cost(frame_ids) * self._local(

@@ -1,0 +1,15 @@
+"""Persistent cross-query repository index (DESIGN.md §13).
+
+Detections and per-chunk statistics outlive the process: a
+:class:`~repro.index.store.RepositoryIndex` is the
+:class:`~repro.serve.batcher.DetectionCache` generalized into a tiered
+store (device tier + exact host tier + disk snapshot, keyed by
+``(frame_id, detector_version)``), and
+:class:`~repro.index.priors.ChunkPriors` accumulates per-chunk, per-class
+Thompson evidence across past searches so a repeat query's first rounds
+start focused instead of uniform.
+"""
+from repro.index.priors import ChunkPriors
+from repro.index.store import RepositoryIndex
+
+__all__ = ["ChunkPriors", "RepositoryIndex"]

@@ -1,0 +1,148 @@
+"""Per-chunk, per-class Thompson priors accumulated across searches.
+
+ExSample's estimator is per-query: every search starts from a uniform
+prior and spends its first rounds rediscovering which chunks are dense
+(paper §3).  Focus (PAPERS.md) shows the repository itself can carry that
+knowledge — accumulate each finished query's per-chunk evidence (and any
+ingest-time proxy scores) and inject it into the NEXT query's alphas.
+
+The injection contract is the load-bearing part.  ``gamma_params`` reads
+``alpha = n1 + alpha0`` and ``beta = n + beta0``, but ``n`` ALSO seeds the
+random+ rank base (which frame of a chunk is sampled next) and the
+exhaustion predicate (``n >= frames``).  Priors therefore touch ONLY
+``n1`` — the sampled-frame sequence, exhaustion behaviour and every other
+piece of machinery stay bit-identical; only the Thompson scores shift.
+With ``prior_weight == 0`` (or no accumulated evidence for the class) the
+sampler state is returned UNCHANGED — the object itself, not a copy — so
+the cold path is bit-identical by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# class key used for class-less (batch-path) evidence
+_NONE_KEY = -1
+
+
+def _key(class_id: Optional[int]) -> int:
+    return _NONE_KEY if class_id is None else int(class_id)
+
+
+class ChunkPriors:
+    """Accumulated per-chunk evidence, one ``(n1_acc, n_acc)`` pair of
+    float64 ``[M]`` arrays per query class (``None`` = class-agnostic).
+
+    ``n1_acc`` sums new-result counts per chunk, ``n_acc`` sums frames
+    sampled per chunk, across every recorded search.  ``warm_sampler``
+    converts the accumulated hit RATE into pseudo-successes scaled by the
+    caller's ``prior_weight`` knob.
+    """
+
+    def __init__(self):
+        self._n1: dict[int, np.ndarray] = {}
+        self._n: dict[int, np.ndarray] = {}
+
+    def __len__(self) -> int:
+        return len(self._n1)
+
+    def classes(self) -> list[Optional[int]]:
+        return [None if k == _NONE_KEY else k for k in sorted(self._n1)]
+
+    # ---- accumulate --------------------------------------------------------
+
+    def record(self, class_id: Optional[int], n1_delta, n_delta) -> None:
+        """Fold one search's per-chunk deltas into the class accumulator.
+
+        ``n1_delta``/``n_delta`` are ``[M]`` (or ``[Q, M]``, summed over
+        the leading axes — the batch multi-query paths record the whole
+        carry at once).  Deltas, not totals: callers subtract the state
+        they started the search from, including any warm-start boost, so
+        injected priors are never re-recorded as fresh evidence.
+        """
+        k = _key(class_id)
+        n1 = np.asarray(n1_delta, np.float64)
+        n = np.asarray(n_delta, np.float64)
+        n1 = n1.reshape(-1, n1.shape[-1]).sum(axis=0)
+        n = n.reshape(-1, n.shape[-1]).sum(axis=0)
+        if k in self._n1:
+            if self._n1[k].shape != n1.shape:
+                raise ValueError(
+                    f"chunk-count mismatch for class {class_id}: recorded "
+                    f"{self._n1[k].shape[0]} chunks, got {n1.shape[0]}"
+                )
+            self._n1[k] += n1
+            self._n[k] += n
+        else:
+            self._n1[k] = n1.copy()
+            self._n[k] = n.copy()
+
+    def ingest(
+        self, class_id: Optional[int], proxy_scores, weight: float = 1.0
+    ) -> None:
+        """Ingest-time proxy evidence (Focus-style cheap scorer): a
+        ``[M]`` per-chunk score in [0, 1] enters the SAME accumulators as
+        real evidence — ``weight`` pseudo-frames per chunk of which
+        ``score × weight`` were pseudo-results."""
+        scores = np.clip(np.asarray(proxy_scores, np.float64), 0.0, 1.0)
+        self.record(class_id, scores * weight, np.full_like(scores, weight))
+
+    # ---- inject ------------------------------------------------------------
+
+    def warm_alphas(
+        self, class_id: Optional[int], num_chunks: int, prior_weight: float
+    ) -> Optional[np.ndarray]:
+        """``f64[M]`` pseudo-success boost for ``n1`` (or None when there
+        is nothing to inject): ``prior_weight × rate_j`` on chunks with
+        evidence, where ``rate_j`` is the accumulated per-chunk hit rate.
+        ``prior_weight`` is therefore "how many already-sampled frames of
+        past experience each chunk's prior is worth"."""
+        if prior_weight <= 0:
+            return None
+        k = _key(class_id)
+        if k not in self._n1:
+            return None
+        n1a, na = self._n1[k], self._n[k]
+        if n1a.shape[0] != num_chunks:
+            return None   # geometry mismatch (different repository): no warm
+        rate = np.clip(n1a, 0.0, None) / np.maximum(na, 1.0)
+        return prior_weight * rate * (na > 0)
+
+    def warm_sampler(self, state, class_id: Optional[int],
+                     prior_weight: float):
+        """Inject the class prior into a ``SamplerState``; returns
+        ``(state', equivalent_frames)``.  Only ``n1`` moves (see module
+        docstring); ``equivalent_frames`` is the total pseudo-evidence
+        injected — the frames of warm-up a cold search would have spent
+        gathering it.  When there is nothing to inject the INPUT state is
+        returned unchanged (bit-identical cold path)."""
+        import jax.numpy as jnp
+
+        boost = self.warm_alphas(
+            class_id, int(state.n1.shape[-1]), prior_weight
+        )
+        if boost is None or not float(boost.sum()) > 0.0:
+            return state, 0.0
+        new_n1 = state.n1 + jnp.asarray(boost, state.n1.dtype)
+        return dataclasses.replace(state, n1=new_n1), float(boost.sum())
+
+    # ---- serde (npz payload inside the RepositoryIndex snapshot) -----------
+
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        out: dict[str, np.ndarray] = {}
+        for k in sorted(self._n1):
+            out[f"n1_{k}"] = self._n1[k]
+            out[f"n_{k}"] = self._n[k]
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays) -> "ChunkPriors":
+        p = cls()
+        for name in arrays:
+            if name.startswith("n1_"):
+                k = int(name[len("n1_"):])
+                p._n1[k] = np.asarray(arrays[name], np.float64)
+                p._n[k] = np.asarray(arrays[f"n_{k}"], np.float64)
+        return p

@@ -30,6 +30,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +61,16 @@ def build_service(args) -> SearchService:
         init_matcher(max_results=args.max_results),
         jnp.stack([jax.random.PRNGKey(0)]),
     )
+    index = None
+    index_path = getattr(args, "index", None)
+    if index_path:
+        from repro.index.store import RepositoryIndex
+
+        index = RepositoryIndex(
+            index_path,
+            detector_version=getattr(args, "detector_version", "v0"),
+            prior_weight=getattr(args, "prior_weight", 0.0),
+        )
     service = SearchService(
         proto, chunks, detector,
         select=select,
@@ -70,6 +81,7 @@ def build_service(args) -> SearchService:
         max_steps=args.max_steps,
         cache_frames=chunks.total_frames if args.cache else 0,
         slots_per_batch=args.slots_per_batch,
+        index=index,
     )
     service.num_classes = num_classes
     print(
@@ -130,8 +142,12 @@ def _print_tenant_summary(service: SearchService) -> None:
         print(line, file=sys.stderr)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def build_parser(ap: Optional[argparse.ArgumentParser] = None
+                 ) -> argparse.ArgumentParser:
+    """The service's CLI surface, reusable by other transports (the HTTP
+    front extends this same parser with its bind address)."""
+    if ap is None:
+        ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="dashcam", choices=["dashcam", "bdd"])
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
@@ -146,7 +162,22 @@ def main() -> None:
     ap.add_argument("--slots-per-batch", type=int, default=4)
     ap.add_argument("--cache", action="store_true", default=True)
     ap.add_argument("--no-cache", dest="cache", action="store_false")
-    args = ap.parse_args()
+    ap.add_argument("--index", default=None,
+                    help="directory for the persistent RepositoryIndex "
+                         "(DESIGN.md §13); loaded if a snapshot exists, "
+                         "saved at every tenant retirement")
+    ap.add_argument("--detector-version", default="v0",
+                    help="detector version key — a mismatch against a "
+                         "snapshot is a clean miss")
+    ap.add_argument("--prior-weight", dest="prior_weight", type=float,
+                    default=0.0,
+                    help="default Thompson warm-start weight for tenants "
+                         "whose plans don't set execution.index")
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     service = build_service(args)
     service.start()

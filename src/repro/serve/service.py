@@ -46,6 +46,8 @@ from typing import Optional
 
 import jax
 
+import numpy as np
+
 from repro.core.executor import SearchStats, tenant_stats_from_row
 from repro.core.plan import PlanError, SearchPlan, ServiceConfig
 from repro.core.runtime import AsyncMultiSearchDriver
@@ -84,6 +86,9 @@ class Tenant:
     #   state) even after the slot index is reused by a later tenant.
     actual_s: float = 0.0            # settled realized cost
     submitted_s: float = 0.0
+    n1_init: object = None           # sampler n1 at admission (f64[M]) —
+    #   includes any injected index prior, so _reap records only the
+    #   DELTA this tenant actually observed (priors never re-recorded)
 
     # ---- reporting ---------------------------------------------------------
 
@@ -138,6 +143,8 @@ class Tenant:
                 spilled=len(row.log),
                 detector_invocations=st.detector_invocations,
                 cache_hits=st.cache_hits,
+                index_hits=st.index_hits,
+                warm_rounds_saved=st.warm_rounds_saved,
                 actual_s=self.actual_s,
                 **self.slo_report(),
             )
@@ -169,17 +176,25 @@ class SearchService:
         max_steps: int = 100_000,
         cache_frames: int = 0,
         slots_per_batch: int = 4,
+        index=None,
     ):
         """``carry_proto`` is a leading-[1] multi-query carry
         (``init_carry_multi``) fixing the pool's sampler/matcher geometry;
-        its single row is vacated immediately and never runs."""
+        its single row is vacated immediately and never runs.  ``index``
+        is a shared :class:`~repro.index.store.RepositoryIndex`: ONE
+        instance serves every tenant — the driver's device cache warms
+        from it at construction, retiring tenants publish their
+        detections and per-chunk evidence back, and warm-start priors
+        inject at admission (keyed by the tenant's ``select_id``)."""
         self.rates = rates
         self.budget = CostBudget(total_s=budget_s)
+        self.index = index
         self.driver = AsyncMultiSearchDriver(
             carry_proto, chunks, detector,
             cohorts=cohorts, num_workers=num_workers,
             result_limits=1, max_steps=max_steps, select=select,
             cache_frames=cache_frames, slots_per_batch=slots_per_batch,
+            index=index,
         )
         self.driver.vacate(0)
         self.tenants: dict[str, Tenant] = {}
@@ -230,6 +245,23 @@ class SearchService:
                 f"service plans are single-query (one tenant = one Q-axis "
                 f"slot); got queries={plan.queries} — submit one plan per "
                 "query", field="queries")
+        spec = plan.execution.index
+        if spec is not None:
+            if self.index is None and spec.prior_weight > 0:
+                raise PlanError(
+                    "plan requests index warm-start (prior_weight > 0) but "
+                    "the service was constructed without a shared "
+                    "RepositoryIndex", field="index")
+            if (
+                self.index is not None
+                and spec.detector_version != self.index.detector_version
+            ):
+                raise PlanError(
+                    f"plan declares index.detector_version="
+                    f"{spec.detector_version!r} but the service index holds "
+                    f"{self.index.detector_version!r} — a version mismatch "
+                    "must be a clean miss, not a silent replay",
+                    field="detector_version")
         svc = plan.execution.service or ServiceConfig()
         projected = plan_projected_cost(plan, self.rates).total_s
         tenant = Tenant(
@@ -284,14 +316,50 @@ class SearchService:
 
     def _admit(self, tenant: Tenant) -> None:
         """Install an already-debited tenant onto the driver (caller holds
-        the service lock; lock order is service → driver, never back)."""
+        the service lock; lock order is service → driver, never back).
+
+        Warm start: when the shared index carries priors and the tenant's
+        plan sets ``prior_weight > 0`` (or the index has a default), the
+        fresh row's zeroed sampler is warmed through
+        :meth:`~repro.index.priors.ChunkPriors.warm_sampler` under the
+        tenant's ``select_id`` as the class key.  The warmed ``n1`` is
+        stashed on the tenant so ``_reap`` records only the delta."""
+        sampler_init = None
+        warm_rounds_saved = 0
+        if self.index is not None:
+            spec = tenant.plan.execution.index
+            w = (
+                spec.prior_weight if spec is not None
+                else self.index.prior_weight
+            )
+            if w > 0:
+                s0 = self.driver.rows[0].carry.sampler
+                fresh = dataclasses.replace(
+                    s0,
+                    n1=jax.numpy.zeros_like(s0.n1),
+                    n=jax.numpy.zeros_like(s0.n),
+                )
+                warmed, equiv = self.index.priors.warm_sampler(
+                    fresh, tenant.select_id, w
+                )
+                if equiv:
+                    sampler_init = warmed
+                    warm_rounds_saved = int(equiv) // max(
+                        self.driver.cohorts, 1
+                    )
         tenant.row = self.driver.admit(
             tenant.key,
             result_limit=int(tenant.plan.result_limit),
             base_max_steps=tenant.plan.max_steps,
             select_id=tenant.select_id,
+            sampler_init=sampler_init,
+            warm_rounds_saved=warm_rounds_saved,
         )
         tenant.row_obj = self.driver.rows[tenant.row]
+        if self.index is not None:
+            tenant.n1_init = np.asarray(
+                tenant.row_obj.carry.sampler.n1, np.float64
+            )
         tenant.state = RUNNING
 
     def _admit_queued(self) -> None:
@@ -336,6 +404,7 @@ class SearchService:
             running = [
                 t for t in self.tenants.values() if t.state == RUNNING
             ]
+        reaped = 0
         for tenant in running:
             row = tenant.row_obj          # bound at admission, never moves
             if row.active or row.inflight or row.vacant:
@@ -347,6 +416,25 @@ class SearchService:
             with self._lock:
                 self.budget.settle(tenant.projected_s, tenant.actual_s)
                 tenant.state = FINISHED
+                if self.index is not None and not self.index.read_only:
+                    # delta against the warmed admission state, so the
+                    # injected prior is never re-recorded as evidence
+                    n1 = np.asarray(row.carry.sampler.n1, np.float64)
+                    n = np.asarray(row.carry.sampler.n, np.float64)
+                    base = (
+                        tenant.n1_init
+                        if tenant.n1_init is not None
+                        else np.zeros_like(n1)
+                    )
+                    self.index.priors.record(
+                        tenant.select_id, n1 - base, n
+                    )
+            reaped += 1
+        if reaped and self.index is not None and not self.index.read_only:
+            with self._lock:
+                self.index.publish_cache(self.driver.cache)
+                if self.index.path is not None:
+                    self.index.save()
 
     def drain(self, deadline_s: float = 120.0) -> None:
         """Block until every queued/running tenant finishes.  With the
@@ -421,4 +509,8 @@ class SearchService:
                     "lanes_padded": self.driver.stats["lanes_padded"],
                 },
                 "driver": dict(self.driver.stats),
+                "index": (
+                    dict(self.index.stats, entries=len(self.index))
+                    if self.index is not None else None
+                ),
             }

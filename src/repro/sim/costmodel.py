@@ -150,6 +150,22 @@ class CostBudget:
     def settle(self, projected_s: float, actual_s: float) -> None:
         """Release the ``projected_s`` reservation and record the realized
         ``actual_s`` spend (the projection is an upper bound, so settling
-        normally credits headroom back)."""
-        self.committed_s -= projected_s
+        normally credits headroom back).
+
+        Hardened against ledger corruption: settling more than is
+        committed (a double-``settle`` of the same tenant, or a credit
+        that was never debited) would silently mint headroom —
+        ``remaining_s`` grows past what the operator granted and later
+        admissions overrun the budget.  Such a call raises instead of
+        corrupting the ledger, as do negative amounts."""
+        if projected_s < 0 or actual_s < 0:
+            raise ValueError(
+                f"settle amounts must be non-negative; got "
+                f"projected_s={projected_s!r}, actual_s={actual_s!r}")
+        if projected_s > self.committed_s + 1e-9:
+            raise ValueError(
+                f"settle({projected_s:.3f}s) exceeds the committed "
+                f"reservation {self.committed_s:.3f}s — double-settle or "
+                "never-debited credit would mint budget headroom")
+        self.committed_s = max(0.0, self.committed_s - projected_s)
         self.spent_s += actual_s

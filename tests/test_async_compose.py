@@ -333,6 +333,6 @@ def test_stats_keys_exist_at_construction(world):
     assert driver.stats == {
         "slots": 0, "merges": 0, "reissues": 0, "duplicate_drops": 0,
         "merge_high_water": 0, "rounds": 0, "spilled": 0,
-        "detector_invocations": 0, "cache_hits": 0,
+        "detector_invocations": 0, "cache_hits": 0, "index_hits": 0,
         "lanes_issued": 0, "lanes_padded": 0,
     }

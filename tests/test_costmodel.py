@@ -1,0 +1,70 @@
+"""CostBudget ledger hardening (service admission correctness).
+
+Pre-fix, ``settle`` unconditionally decremented ``committed_s`` — a
+double-settle of the same tenant (or a settle that was never debited)
+drove ``committed_s`` negative, which MINTS headroom: ``remaining_s =
+total − committed − spent`` grows past what the operator granted and
+later admissions overrun the budget.  These are the regression tests
+that fail against the old unconditional arithmetic.
+"""
+import pytest
+
+from repro.sim.costmodel import CostBudget
+
+
+def test_settle_releases_and_credits():
+    b = CostBudget(total_s=100.0)
+    assert b.debit(30.0)
+    assert b.remaining_s == pytest.approx(70.0)
+    b.settle(30.0, 10.0)   # projection was an upper bound: credit back
+    assert b.committed_s == pytest.approx(0.0)
+    assert b.spent_s == pytest.approx(10.0)
+    assert b.remaining_s == pytest.approx(90.0)
+
+
+def test_double_settle_raises_instead_of_minting_headroom():
+    b = CostBudget(total_s=100.0)
+    assert b.debit(30.0)
+    b.settle(30.0, 10.0)
+    with pytest.raises(ValueError, match="double-settle|exceeds"):
+        b.settle(30.0, 10.0)
+    # the ledger is unchanged by the refused call
+    assert b.committed_s == pytest.approx(0.0)
+    assert b.spent_s == pytest.approx(10.0)
+    assert b.remaining_s <= b.total_s - b.spent_s
+
+
+def test_never_debited_settle_raises():
+    b = CostBudget(total_s=50.0)
+    with pytest.raises(ValueError):
+        b.settle(5.0, 1.0)
+    assert b.remaining_s == pytest.approx(50.0)
+
+
+def test_over_credit_beyond_committed_raises():
+    b = CostBudget(total_s=100.0)
+    assert b.debit(10.0)
+    assert b.debit(10.0)
+    with pytest.raises(ValueError):
+        b.settle(25.0, 5.0)   # more than the 20 committed
+    assert b.committed_s == pytest.approx(20.0)
+
+
+def test_negative_amounts_raise():
+    b = CostBudget(total_s=100.0)
+    assert b.debit(10.0)
+    with pytest.raises(ValueError, match="non-negative"):
+        b.settle(-1.0, 0.0)
+    with pytest.raises(ValueError, match="non-negative"):
+        b.settle(1.0, -0.5)
+
+
+def test_float_accumulation_tolerance():
+    """Many tiny settle cycles must not trip the guard on float dust."""
+    b = CostBudget(total_s=10.0)
+    for _ in range(1000):
+        assert b.debit(0.001)
+    for _ in range(1000):
+        b.settle(0.001, 0.0005)
+    assert b.committed_s == pytest.approx(0.0, abs=1e-6)
+    assert b.spent_s == pytest.approx(0.5, abs=1e-6)

@@ -1,0 +1,84 @@
+"""ShardedFrameStore: explicit locality masks at stripe boundaries.
+
+``fetch`` used to silently zero remote payloads, making a remote frame
+indistinguishable from a genuinely-zero local embedding.  It now returns
+``(payload, local_mask)``; these tests pin the mask semantics exactly at
+the stripe boundary when ``total_frames % num_hosts != 0`` — the last
+host's short stripe is where an off-by-one silently mis-attributes
+ownership.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.framestore import ShardedFrameStore, SimFrameStore
+from repro.sim import RepoSpec, generate
+
+
+@pytest.fixture(scope="module")
+def store():
+    spec = RepoSpec(
+        video_lengths=[50], num_instances=5, chunk_frames=10, seed=3,
+    )
+    repo, _ = generate(spec)
+    return SimFrameStore(repo=repo, embed_dim=8)
+
+
+def _sharded(store, host_id, num_hosts):
+    return ShardedFrameStore(
+        inner=store, host_id=host_id, num_hosts=num_hosts
+    )
+
+
+def test_fetch_returns_payload_and_mask(store):
+    s = _sharded(store, 0, 4)          # stripe = ceil(50/4) = 13: [0, 13)
+    payload, mask = s.fetch(jnp.asarray([0, 12, 13], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(mask), [True, True, False])
+    assert payload.shape == (3, 8)
+    # remote lanes are zeroed; local lanes carry the inner embedding
+    np.testing.assert_array_equal(np.asarray(payload[2]), np.zeros(8))
+    inner = store.fetch(jnp.asarray([0], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(payload[0]), np.asarray(inner[0]))
+
+
+def test_stripe_boundary_uneven_division(store):
+    """50 frames over 4 hosts: stripes [0,13) [13,26) [26,39) [39,50) —
+    the LAST stripe is short (11 frames) and must clamp at total."""
+    frames = jnp.arange(50, dtype=jnp.int32)
+    owners = np.zeros(50, bool)
+    for h in range(4):
+        mask = np.asarray(_sharded(store, h, 4).local_mask(frames))
+        lo, hi = h * 13, min((h + 1) * 13, 50)
+        np.testing.assert_array_equal(
+            mask, (np.arange(50) >= lo) & (np.arange(50) < hi),
+            err_msg=f"host {h}",
+        )
+        assert not np.any(owners & mask), "stripes must not overlap"
+        owners |= mask
+    assert owners.all(), "every frame has exactly one owner"
+
+
+def test_ids_past_repository_end_local_to_no_host(store):
+    probe = jnp.asarray([49, 50, 62], jnp.int32)
+    for h in range(4):
+        mask = np.asarray(_sharded(store, h, 4).local_mask(probe))
+        assert not mask[1] and not mask[2], (
+            f"host {h} claimed an id past total_frames")
+    # frame 49 belongs to the short last stripe only
+    assert bool(_sharded(store, 3, 4).local_mask(probe)[0])
+
+
+def test_owner_of_agrees_with_local_mask(store):
+    frames = jnp.arange(50, dtype=jnp.int32)
+    owners = np.asarray(_sharded(store, 0, 4).owner_of(frames))
+    for h in range(4):
+        mask = np.asarray(_sharded(store, h, 4).local_mask(frames))
+        np.testing.assert_array_equal(mask, owners == h)
+
+
+def test_decode_cost_zero_for_remote(store):
+    s = _sharded(store, 1, 4)          # owns [13, 26)
+    cost = np.asarray(s.decode_cost(jnp.asarray([0, 13, 25, 26], jnp.int32)))
+    assert cost[0] == 0.0 and cost[3] == 0.0
+    assert cost[1] > 0.0 and cost[2] > 0.0

@@ -1,0 +1,98 @@
+"""Two-process persistence smoke: the snapshot survives the process.
+
+Phase 1 runs a search with a writable index in a SUBPROCESS (a genuinely
+separate interpreter — nothing survives but the disk snapshot), prints
+its result counts, and exits.  Phase 2, in this process, rebuilds the
+IDENTICAL deterministic world (same RepoSpec seed), reruns the identical
+plan against the snapshot, and must replay it exactly: zero fresh
+detector calls on seen frames, identical result count.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import init_carry_multi, init_matcher, init_state
+from repro.core.plan import Execution, IndexSpec, SearchPlan
+from repro.sim import RepoSpec, generate
+from repro.sim.oracle import oracle_detect
+
+SPEC = dict(
+    video_lengths=[5_000] * 3, num_instances=100, chunk_frames=500,
+    locality=4.0, seed=7,
+)
+PLAN = dict(result_limit=10, max_steps=600, cohorts=4)
+
+PHASE1 = textwrap.dedent(
+    """
+    import json, sys
+    import jax, jax.numpy as jnp
+    from repro.core import init_carry_multi, init_matcher, init_state
+    from repro.core.plan import Execution, IndexSpec, SearchPlan
+    from repro.sim import RepoSpec, generate
+    from repro.sim.oracle import oracle_detect
+
+    path = sys.argv[1]
+    repo, chunks = generate(RepoSpec(**{spec}))
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    carry = init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=512),
+        jnp.stack([jax.random.PRNGKey(0)]),
+    )
+    res = SearchPlan(
+        **{plan},
+        execution=Execution(
+            queries_axis=True, cache=-1, index=IndexSpec(path=path),
+        ),
+    ).run(carry, chunks, detector=det)
+    print("PHASE1 " + json.dumps({{
+        "results": res.results[0], "steps": res.steps[0],
+        "detector_invocations": res.stats.detector_invocations,
+        "persisted": res.stats.persisted_detections,
+    }}))
+    """
+).format(spec=SPEC, plan=PLAN)
+
+
+def test_snapshot_survives_process_restart(tmp_path):
+    path = str(tmp_path / "idx")
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", PHASE1, path],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    line = next(
+        (l for l in r.stdout.splitlines() if l.startswith("PHASE1 ")), None
+    )
+    assert line is not None, r.stdout[-3000:] + "\n" + r.stderr[-3000:]
+    phase1 = json.loads(line[len("PHASE1 "):])
+    assert phase1["persisted"] > 0
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+
+    # phase 2: fresh interpreter state in THIS process, restart from disk
+    repo, chunks = generate(RepoSpec(**SPEC))
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    carry = init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=512),
+        jnp.stack([jax.random.PRNGKey(0)]),
+    )
+    res = SearchPlan(
+        **PLAN,
+        execution=Execution(
+            queries_axis=True, cache=-1, index=IndexSpec(path=path),
+        ),
+    ).run(carry, chunks, detector=det)
+    assert res.results[0] == phase1["results"]
+    assert res.steps[0] == phase1["steps"]
+    assert res.stats.detector_invocations == 0, (
+        "every frame of the deterministic replay was in the snapshot")
+    assert res.stats.index_hits > 0
+    assert phase1["detector_invocations"] >= 5 * max(
+        res.stats.detector_invocations, 1
+    )

@@ -1,0 +1,114 @@
+"""HTTP front e2e smoke: JSON POST → live SearchService → JSON response.
+
+Drives :func:`repro.launch.serve_http.make_server` in-process on an
+ephemeral port (bind to 0, read the port back): submit a tenant, poll
+GET /stats, drain, and verify the transport-error contract (400 for
+malformed JSON, 404 unknown path) — protocol-level failures (unknown op,
+PlanError) stay HTTP 200 with ``{"ok": false}``.
+"""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import init_carry_multi, init_matcher, init_state
+from repro.launch.serve_http import make_server
+from repro.serve.service import SearchService
+from repro.sim import RepoSpec, generate
+from repro.sim.oracle import class_select, oracle_detect
+
+
+@pytest.fixture(scope="module")
+def front():
+    spec = RepoSpec(
+        video_lengths=[5_000] * 3, num_instances=100, chunk_frames=500,
+        locality=4.0, seed=7,
+    )
+    repo, chunks = generate(spec)
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=None)
+    proto = init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=64),
+        jnp.stack([jax.random.PRNGKey(0)]),
+    )
+    service = SearchService(
+        proto, chunks, det, select=class_select(repo, [0, 1]),
+        cohorts=2, num_workers=1, slots_per_batch=2,
+        cache_frames=chunks.total_frames,
+    )
+    server = make_server(service, port=0)
+    port = server.server_address[1]
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    service.start(pump=False)
+    yield service, f"http://127.0.0.1:{port}"
+    server.shutdown()
+    server.server_close()
+    service.stop()
+    thread.join(timeout=5.0)
+
+
+def _post(base, obj, raw=None):
+    req = urllib.request.Request(
+        base, data=raw if raw is not None else json.dumps(obj).encode(),
+        headers={"Content-Type": "application/json"}, method="POST",
+    )
+    with urllib.request.urlopen(req, timeout=30) as resp:
+        return json.loads(resp.read().decode())
+
+
+def _get(base, path=""):
+    with urllib.request.urlopen(base + path, timeout=30) as resp:
+        return json.loads(resp.read().decode())
+
+
+def test_http_submit_drain_stats(front):
+    service, base = front
+    resp = _post(base, {
+        "op": "submit", "tenant": "t-http", "class": 0, "seed": 1,
+        "plan": {
+            "result_limit": 6, "max_steps": 1500, "cohorts": 2,
+            "execution": {"queries_axis": True},
+        },
+    })
+    assert resp["ok"] is True and resp["state"] == "running", resp
+    resp = _post(base, {"op": "drain"})
+    assert resp["ok"] is True
+    tenant = resp["tenants"]["t-http"]
+    assert tenant["state"] == "finished"
+    assert tenant["results"] == 6
+    assert tenant["detector_invocations"] > 0
+    # GET /stats serves the same view without a body
+    stats = _get(base, "/stats")
+    assert stats["ok"] is True
+    assert stats["tenants"]["t-http"]["state"] == "finished"
+
+
+def test_http_protocol_error_is_200_ok_false(front):
+    _, base = front
+    resp = _post(base, {"op": "frobnicate"})
+    assert resp["ok"] is False and "unknown op" in resp["error"]
+    # a PlanError surfaces as ok:false with its typed field
+    resp = _post(base, {
+        "op": "submit", "tenant": "bad",
+        "plan": {"result_limit": 5, "queries": 3,
+                 "execution": {"queries_axis": True}},
+    })
+    assert resp["ok"] is False and resp.get("field") == "queries"
+
+
+def test_http_transport_errors(front):
+    _, base = front
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _post(base, None, raw=b"{not json")
+    assert e.value.code == 400
+    assert json.loads(e.value.read().decode())["ok"] is False
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _post(base, None, raw=b'["a", "list"]')
+    assert e.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _get(base, "/nope")
+    assert e.value.code == 404
