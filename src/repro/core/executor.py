@@ -196,6 +196,11 @@ class LoweredPlan:
         cache = ex.cache
         if cache == -1:
             cache = chunks.total_frames
+        if cache and self.kind == "multi_sharded":
+            # hash-sharded placement (DESIGN.md §14) needs the capacity to
+            # divide over the mesh; pad BEFORE the index warm so the warm
+            # fill and the device layout agree on one modulus
+            cache += (-cache) % ex.shards
         if isinstance(p.result_limit, tuple):
             limits = p.result_limit
         else:
@@ -429,8 +434,14 @@ def _search_multi_sharded_device(
     matcher: MatcherState,   # leaves [Q, ...] — replicated
     chunks: ChunkIndex,      # replicated
     result_limits: jax.Array,  # i32[Q]
-    cache,                   # DetectionCache or None — replicated, per-shard
-    warm_tag,                # i32[S] index-preload tag snapshot, or None
+    cache,                   # DetectionCache or None — hash-sharded global
+    #   layout (shard_cache_layout): leading axes split over the mesh so
+    #   each shard holds the 1/S of one logical cache homed on it
+    warm_tag,                # i32[cap] index-preload tag snapshot
+    #   (direct-mapped layout, replicated), or None
+    window_limit: jax.Array,  # i32[] — max sync windows THIS call executes
+    #   (INT32_MAX = run to completion; a finite limit returns a fully
+    #   resumable state at a sync boundary, the elastic drain point)
     *,
     mesh,
     axis: str,
@@ -454,8 +465,9 @@ def _search_multi_sharded_device(
     buffer per shard.  Per round the replicated
     ``local_cohort_winners_batched`` choice hands shard s cohorts
     ``[s·C/S, (s+1)·C/S)`` of EVERY query, whose Q·C/S frames dedup — and
-    miss-check a shard-local :class:`DetectionCache` — into one detector
-    batch.  Per-query liveness is evaluated at sync boundaries (the §8
+    miss-check the HASH-SHARDED :class:`DetectionCache` (frame f homed on
+    shard ``f % S``, DESIGN.md §14; lookups and inserts route over
+    ``all_to_all``) — into one detector batch.  Per-query liveness is evaluated at sync boundaries (the §8
     overshoot caveat, per query); a finished query freezes exactly like the
     §9 masking contract (key/step/sampler gated, slots leave the dedup).
 
@@ -471,9 +483,9 @@ def _search_multi_sharded_device(
         local_cohort_winners_batched,
     )
     from repro.serve.batcher import (
-        cache_insert,
-        cache_lookup,
         dedup_first_index,
+        sharded_cache_insert,
+        sharded_cache_lookup,
     )
     from jax.sharding import PartitionSpec as P
 
@@ -488,7 +500,7 @@ def _search_multi_sharded_device(
     cap_r = matcher.times_seen.shape[-1]
 
     def shard_fn(keys, step0, results0, n1_l, n_l, frames_l, matcher0,
-                 chks, rlimits, cache0, wtag):
+                 chks, rlimits, cache0, wtag, wlimit):
         shard_id = jax.lax.axis_index(axis)
         fdt = n_l.dtype
         qi = jnp.arange(q_n, dtype=jnp.int32)
@@ -540,13 +552,17 @@ def _search_multi_sharded_device(
             )
 
             # ---- this shard's slots: cohorts [s·C/S, (s+1)·C/S) of every
-            # query, deduped + cache-checked into ONE detector batch ----
+            # query, deduped + cache-checked into ONE detector batch.  The
+            # full [Q, C] frame matrix is computed replicated — winner ids
+            # and ranks are replicated, so every shard knows which frames
+            # every OTHER shard processes this round, which is what makes
+            # the hash-sharded cache routing below collective-cheap ----
+            fids_all = randomplus_frame(chks, c_ids, ranks)      # [Q, C]
             g0 = shard_id * per_shard
             slc = lambda a: jax.lax.dynamic_slice(
                 a, (0, g0), (q_n, per_shard)
             )
-            cids_s, ranks_s, live_s = slc(c_ids), slc(ranks), slc(live_c)
-            fids_s = randomplus_frame(chks, cids_s, ranks_s)     # [Q, C/S]
+            cids_s, live_s, fids_s = slc(c_ids), slc(live_c), slc(fids_all)
             gidx = g0 + jnp.arange(per_shard, dtype=jnp.int32)
             det_keys = jax.vmap(
                 lambda kq: jax.vmap(
@@ -560,7 +576,32 @@ def _search_multi_sharded_device(
             is_rep = (first_idx == jnp.arange(b, dtype=jnp.int32)) & flat_live
             fresh = jax.vmap(detector)(det_keys_flat, flat_frames)
             if cache is not None:
-                hit, cached = cache_lookup(cache, flat_frames)
+                # Hash-sharded cache routing (DESIGN.md §14): frame f lives
+                # ONLY on shard f % S.  Requests are free — the replicated
+                # [Q, C] frame matrix lets every home shard compute every
+                # requester's probes locally — so one round costs two
+                # all_to_alls out (hit flags + values, rows = requesters)
+                # and two back in (routed fresh inserts).  Per-link volume
+                # matches the all-gathers this replaces, but each shard now
+                # stores and scans 1/S of one logical cache instead of a
+                # full replica.
+                req = jnp.where(live_c, fids_all, -1)            # [Q, C]
+                req = req.reshape(q_n, num_shards, per_shard)
+                req = req.transpose(1, 0, 2).reshape(num_shards, b)
+                r_hit, r_vals = sharded_cache_lookup(
+                    cache, req, shard_id, num_shards
+                )                                                # [S, b]
+                a_hit = jax.lax.all_to_all(r_hit, axis, 0, 0)
+                a_vals = jax.tree.map(
+                    lambda x: jax.lax.all_to_all(x, axis, 0, 0), r_vals
+                )
+                # row h of a_* is home shard h's answer for MY b slots
+                home = jnp.where(
+                    flat_frames >= 0, flat_frames % num_shards, 0
+                )
+                bi = jnp.arange(b, dtype=jnp.int32)
+                hit = a_hit[home, bi]
+                cached = jax.tree.map(lambda x: x[home, bi], a_vals)
                 expand = lambda mk, x: mk.reshape(
                     mk.shape + (1,) * (x.ndim - 1)
                 )
@@ -569,25 +610,35 @@ def _search_multi_sharded_device(
                     cached, fresh,
                 )
                 need = is_rep & ~hit
-                # Cross-shard cache replication: insert EVERY shard's fresh
-                # detections locally.  The S caches start identical and the
-                # gathered insertion batch is replicated, so they stay
-                # replicas — a frame detected on any shard this round hits
-                # on every shard from the next round on.  Without this, a
-                # query's pick of one chunk lands on a different shard each
-                # round (cohort round-robin) and cross-round reuse — the
-                # §9 economics — almost never hits.  Collective volume is
-                # one [S·Q·C/S]-slot detection gather per round, trivial
-                # next to the detector pass it saves.
-                g_frames = jax.lax.all_gather(flat_frames, axis).reshape(-1)
-                g_need = jax.lax.all_gather(need, axis).reshape(-1)
-                g_fresh = jax.tree.map(
-                    lambda x: jax.lax.all_gather(x, axis).reshape(
-                        (-1,) + x.shape[1:]
+                # route fresh detections to their home shards; flattening
+                # the received rows requester-major reproduces the exact
+                # u-major batch order the replica design's gathered insert
+                # used, so within-batch slot collisions pick the same
+                # winner and the logical cache stays bit-identical
+                dest = jnp.arange(num_shards, dtype=jnp.int32)[:, None]
+                ins_frames = jnp.where(
+                    (home[None, :] == dest) & need[None, :],
+                    flat_frames[None, :], -1,
+                )                                                # [S, b]
+                ins_vals = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (num_shards,) + x.shape
                     ),
                     fresh,
                 )
-                cache = cache_insert(cache, g_frames, g_fresh, g_need)
+                g_frames = jax.lax.all_to_all(
+                    ins_frames, axis, 0, 0
+                ).reshape(-1)
+                g_vals = jax.tree.map(
+                    lambda x: jax.lax.all_to_all(x, axis, 0, 0).reshape(
+                        (-1,) + x.shape[2:]
+                    ),
+                    ins_vals,
+                )
+                cache = sharded_cache_insert(
+                    cache, g_frames, g_vals, g_frames >= 0,
+                    shard_id, num_shards,
+                )
             else:
                 hit = jnp.zeros((b,), bool)
                 resolved = fresh
@@ -720,12 +771,14 @@ def _search_multi_sharded_device(
                 buf, idx, entry
             )
             tn = jnp.minimum(tn + active.astype(jnp.int32), cap)
-            cont = jnp.any(live_mask(step, results, n_l))
+            cont = jnp.any(live_mask(step, results, n_l)) & (
+                windows + 1 < wlimit
+            )
             return (keys, n1_l, n_l, merged, merged, cache, step, results,
                     buf, tn, wcalls, whits, wihits, hw, ov, windows + 1,
                     cont)
 
-        cont0 = jnp.any(live_mask(step0, results0, n_l))
+        cont0 = jnp.any(live_mask(step0, results0, n_l)) & (wlimit > 0)
         init = (
             keys, n1_l, n_l, matcher0, matcher0, cache0, step0, results0,
             jnp.zeros((q_n, cap, 2), jnp.int32),
@@ -754,27 +807,31 @@ def _search_multi_sharded_device(
         outs = (n1_l, n_l, matcher, keys, step, results, buf, tn, calls,
                 hits, ihits, hw, ov, windows)
         if cache_f is not None:
-            # the per-shard caches are replicas (all-gathered inserts), so
-            # returning one with a replicated spec is exact — the executor
-            # publishes it into the repository index after the run
+            # each shard returns only its 1/S of the hash-sharded logical
+            # cache; concatenating over the sharded out-spec reproduces
+            # the global shard-major layout, and the host wrapper's
+            # unshard_cache_layout turns it back into the direct-mapped
+            # cache the index publish path understands
             outs = outs + (cache_f,)
         return outs
 
-    sh2, rep = P(None, axis), P()
+    sh1, sh2, rep = P(axis), P(None, axis), P()
     out_specs = (
         sh2, sh2, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep,
         rep,
     )
+    cache_spec = rep if cache is None else sh1
     if cache is not None:
-        out_specs = out_specs + (rep,)
+        out_specs = out_specs + (sh1,)
     return get_shard_map()(
         shard_fn,
         mesh=mesh,
-        in_specs=(rep, rep, rep, sh2, sh2, sh2, rep, rep, rep, rep, rep),
+        in_specs=(rep, rep, rep, sh2, sh2, sh2, rep, rep, rep, cache_spec,
+                  rep, rep),
         out_specs=out_specs,
         check_rep=False,
     )(keys, step0, results0, n1, n, frames, matcher, chunks, result_limits,
-      cache, warm_tag)
+      cache, warm_tag, window_limit)
 
 
 def run_search_multi_sharded(
@@ -792,6 +849,7 @@ def run_search_multi_sharded(
     cache_frames: int = 0,
     cache=None,
     warm_tag=None,
+    window_limit: int | None = None,
 ):
     """Q concurrent queries × an M-sharded mesh, one deduplicated detector
     pass per round per shard (DESIGN.md §10) — the composed lowering behind
@@ -808,7 +866,15 @@ def run_search_multi_sharded(
     ``cache`` overrides internal cache construction (a repository-index
     preload, DESIGN.md §13); ``warm_tag`` — the preload's tag snapshot —
     splits ``index_hits`` out of ``cache_hits``.  Whenever a cache is in
-    play its final state rides back in ``stats["final_cache"]``.
+    play its final state rides back in ``stats["final_cache"]``
+    (direct-mapped layout; the hash-sharded device layout is internal).
+
+    ``window_limit`` caps how many sync windows THIS call executes
+    (default: unbounded).  A capped call returns at a sync boundary with a
+    fully resumable state — carry + ``stats["final_cache"]`` feed straight
+    back in — which is the drain point the elastic runner
+    (:class:`repro.core.runtime.ElasticShardedRunner`) uses to reshard
+    onto a shrunken mesh between calls.
     """
     num_shards = mesh.shape[axis]
     if cohorts is None:
@@ -830,10 +896,18 @@ def run_search_multi_sharded(
     if cache is None and cache_frames:
         from repro.serve.batcher import init_detection_cache
 
+        # the hash-sharded placement needs capacity % shards == 0 to be a
+        # pure transposition of the direct-mapped slot map; padding the
+        # capacity up never loses entries (it only splits collision sets)
+        cache_frames += (-cache_frames) % num_shards
         struct = jax.eval_shape(
             detector, jax.random.PRNGKey(0), jnp.zeros((), jnp.int32)
         )
         cache = init_detection_cache(struct, cache_frames)
+    if cache is not None:
+        from repro.serve.batcher import shard_cache_layout
+
+        cache = shard_cache_layout(cache, num_shards)
 
     outs = _search_multi_sharded_device(
         carries.key,
@@ -849,6 +923,11 @@ def run_search_multi_sharded(
         ),
         cache,
         warm_tag,
+        jnp.asarray(
+            np.iinfo(np.int32).max if window_limit is None
+            else int(window_limit),
+            jnp.int32,
+        ),
         mesh=mesh,
         axis=axis,
         detector=detector,
@@ -861,7 +940,11 @@ def run_search_multi_sharded(
     )
     (n1_out, n_out, matcher, keys, step, results, buf, tn, calls, hits,
      ihits, hw, ov, windows) = outs[:14]
-    final_cache = outs[14] if cache is not None else None
+    final_cache = None
+    if cache is not None:
+        from repro.serve.batcher import unshard_cache_layout
+
+        final_cache = unshard_cache_layout(outs[14], num_shards)
     out = ExSampleCarry(
         sampler=dataclasses.replace(
             carries.sampler,

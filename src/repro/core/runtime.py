@@ -988,3 +988,252 @@ class AsyncMultiSearchDriver:
     @property
     def logs(self) -> list:
         return [row.log for row in self.rows]
+
+
+class ElasticShardedRunner:
+    """Elastic mesh-shrink recovery for the composed sharded driver
+    (DESIGN.md §14).
+
+    Runs ``run_search_multi_sharded`` in bounded slices of ``sync_windows``
+    sync windows.  Every slice returns a fully resumable state (carry +
+    hash-sharded cache in direct-mapped layout), so between slices the
+    runner heartbeats the live workers and sweeps the
+    :class:`~repro.distributed.fault_tolerance.HeartbeatMonitor`.  When a
+    sweep returns a dead verdict the runner *drains at the boundary it is
+    already standing on* — the in-flight window always completes and its
+    merged results are never lost — then shrinks the mesh:
+
+      1. pick the largest shard count ``k`` ≤ surviving workers with
+         ``cohorts % k == 0``, validated through
+         :func:`repro.distributed.elastic.plan_resize` (empty schema — the
+         search carries no sharded params; the check is the data-parallel
+         batch divisibility);
+      2. re-place the sampler chunk statistics with
+         :func:`repro.distributed.elastic.resize_chunk_stats` (strip the
+         old shard padding, re-pad for ``k`` — padding never stacks
+         across successive shrinks);
+      3. re-place the detection cache: the direct-mapped snapshot is
+         carried forward as-is when its capacity already divides by ``k``,
+         otherwise :func:`repro.serve.batcher.reshard_cache_host` re-hashes
+         it to the padded capacity (memoization state — a collision under
+         the new modulus costs a future detector call, never correctness);
+         ``warm_tag`` is left untouched (its index-hit check uses its own
+         capacity modulus);
+      4. rebuild a ``("data",)`` mesh over the first ``k`` devices and
+         resume — the next slice re-lowers for the new mesh automatically.
+
+    Because dead verdicts are only *acted on* at slice boundaries, a
+    worker dying mid-window is deferred to the next boundary by
+    construction, and a death during the final window simply never
+    triggers a reshard — the search completes on the survivors' already
+    merged state.
+
+    Determinism: the random+ sampling stream is keyed per query/round,
+    not per shard, and the hash-sharded cache content is a pure
+    re-placement of the direct-mapped layout — so replaying the same
+    death schedule yields the same result multiset.
+    """
+
+    def __init__(
+        self,
+        carries: ExSampleCarry,
+        chunks: ChunkIndex,
+        *,
+        detector: Callable,
+        result_limits,
+        max_steps: int,
+        num_shards: int,
+        cohorts: Optional[int] = None,
+        sync_every: int = 1,
+        select: Optional[SelectFn] = None,
+        cache_frames: int = 0,
+        cache=None,
+        warm_tag=None,
+        monitor: Optional[HeartbeatMonitor] = None,
+        clock: Callable[[], float] = time.monotonic,
+        sync_windows: int = 1,
+    ):
+        from repro.launch.mesh import make_data_mesh
+
+        if sync_windows < 1:
+            raise ValueError(f"sync_windows={sync_windows} must be >= 1")
+        self.carry = carries
+        self.chunks = chunks
+        self.detector = detector
+        self.max_steps = int(max_steps)
+        self.num_shards = int(num_shards)
+        self.cohorts = int(cohorts) if cohorts is not None else self.num_shards
+        self.sync_every = int(sync_every)
+        self.select = select
+        self.cache_frames = int(cache_frames)
+        self.warm_tag = warm_tag
+        self.sync_windows = int(sync_windows)
+        self.clock = clock
+        self.monitor = monitor if monitor is not None else HeartbeatMonitor()
+        self.mesh = make_data_mesh(self.num_shards)
+        q_n = int(carries.step.shape[0])
+        self.result_limits = np.broadcast_to(
+            np.asarray(result_limits, np.int32), (q_n,)
+        ).copy()
+        # workers currently heartbeating; kill_worker() silences one (on a
+        # real cluster the process died — heartbeats simply stop arriving)
+        self.alive: set[int] = set(range(self.num_shards))
+        now = self.clock()
+        for w in sorted(self.alive):
+            self.monitor.register(w, now)
+        self._cache = cache          # direct-mapped snapshot between slices
+        if cache is not None:
+            from repro.serve.batcher import reshard_cache_host
+
+            cap = int(cache.tag.shape[0])
+            self._cache = reshard_cache_host(
+                cache, cap + (-cap) % self.num_shards
+            )
+        self._first_call = True
+        self.traces: list[list] = [[] for _ in range(q_n)]
+        self.stats = {
+            "detector_invocations": 0, "cache_hits": 0, "index_hits": 0,
+            "rounds": 0, "merges": 0, "merge_high_water": 0,
+            "merge_overflow": False, "frames_sampled": 0,
+            "reshard_events": [], "final_cache": None,
+        }
+
+    # ---- liveness ----------------------------------------------------------
+
+    def kill_worker(self, worker: int) -> None:
+        """Stop heartbeating ``worker`` — the monitor's silence window
+        starts now; the dead verdict lands at a later boundary sweep."""
+        self.alive.discard(worker)
+
+    def _live_queries(self) -> np.ndarray:
+        """Host mirror of the device ``live_mask`` predicate."""
+        res = np.asarray(self.carry.results)
+        step = np.asarray(self.carry.step)
+        n = np.asarray(self.carry.sampler.n)
+        frames = np.asarray(self.carry.sampler.frames).astype(n.dtype)
+        exhausted = (n >= frames).all(axis=-1)
+        return (res < self.result_limits) & (step < self.max_steps) & ~exhausted
+
+    # ---- mesh shrink -------------------------------------------------------
+
+    def _shrink(self, dead: list) -> None:
+        from repro.distributed.elastic import plan_resize, resize_chunk_stats
+        from repro.launch.mesh import make_data_mesh
+
+        survivors = sorted(self.alive)
+        if not survivors:
+            raise RuntimeError("elastic shrink: no surviving workers")
+        new_shards = None
+        for k in range(min(len(survivors), self.num_shards), 0, -1):
+            if self.cohorts % k:
+                continue
+            plan = plan_resize(
+                {}, make_data_mesh(k), global_batch=self.cohorts
+            )
+            if plan.feasible:
+                new_shards = k
+                break
+        if new_shards is None:
+            raise RuntimeError(
+                f"elastic shrink: no feasible shard count <= "
+                f"{len(survivors)} survivors for cohorts={self.cohorts}"
+            )
+        n1, n, frames = resize_chunk_stats(
+            self.carry.sampler.n1,
+            self.carry.sampler.n,
+            self.carry.sampler.frames,
+            new_shards,
+        )
+        # every leaf still lives on the OLD mesh's devices; pull to host so
+        # the next slice's lowering re-places it on the survivors' mesh
+        self.carry = jax.tree.map(
+            np.asarray,
+            dataclasses.replace(
+                self.carry,
+                sampler=dataclasses.replace(
+                    self.carry.sampler, n1=n1, n=n, frames=frames
+                ),
+            ),
+        )
+        if self._cache is not None:
+            from repro.serve.batcher import reshard_cache_host
+
+            self._cache = jax.tree.map(np.asarray, self._cache)
+            cap = int(self._cache.tag.shape[0])
+            self._cache = reshard_cache_host(
+                self._cache, cap + (-cap) % new_shards
+            )
+        if self.warm_tag is not None:
+            self.warm_tag = np.asarray(self.warm_tag)
+        self.stats["reshard_events"].append({
+            "window": self.stats["merges"],
+            "from_shards": self.num_shards,
+            "to_shards": new_shards,
+            "dead": sorted(dead),
+        })
+        self.num_shards = new_shards
+        self.mesh = make_data_mesh(new_shards)
+
+    # ---- execution ---------------------------------------------------------
+
+    def step(self) -> bool:
+        """Run one bounded slice + one boundary sweep.  Returns True while
+        live queries remain."""
+        from repro.core.executor import run_search_multi_sharded
+
+        out, traces, stats = run_search_multi_sharded(
+            self.carry,
+            self.chunks,
+            mesh=self.mesh,
+            detector=self.detector,
+            result_limits=self.result_limits,
+            max_steps=self.max_steps,
+            cohorts=self.cohorts,
+            sync_every=self.sync_every,
+            select=self.select,
+            cache_frames=self.cache_frames if self._first_call else 0,
+            cache=self._cache,
+            warm_tag=self.warm_tag,
+            window_limit=self.sync_windows,
+        )
+        self._first_call = False
+        self.carry = out
+        self._cache = stats["final_cache"]
+        for q, t in enumerate(traces):
+            self.traces[q].extend(t)
+        self.stats["detector_invocations"] += stats["detector_invocations"]
+        self.stats["cache_hits"] += stats["cache_hits"]
+        self.stats["index_hits"] += stats["index_hits"]
+        self.stats["rounds"] += stats["rounds"]
+        self.stats["merges"] += stats["merges"]
+        self.stats["merge_high_water"] = max(
+            self.stats["merge_high_water"], stats["merge_high_water"]
+        )
+        self.stats["merge_overflow"] |= stats["merge_overflow"]
+        if not self._live_queries().any():
+            return False
+        now = self.clock()
+        for w in sorted(self.alive):
+            self.monitor.heartbeat(w, now)
+        verdict = self.monitor.sweep(now)
+        dead = [w for w in verdict["dead"] if w < self.num_shards]
+        if dead:
+            self._shrink(dead)
+        return True
+
+    def run(self):
+        """Drive every query to completion; returns ``(carry, traces,
+        stats)`` with the same shapes as ``run_search_multi_sharded`` plus
+        ``stats["reshard_events"]``."""
+        # a live query advances `cohorts` steps every window, so this many
+        # slices always suffice; exceeding it means the driver stalled
+        budget = self.max_steps // (self.cohorts * self.sync_windows) + 2
+        while self.step():
+            budget -= 1
+            if budget < 0:
+                raise RuntimeError("elastic runner made no progress")
+        self.stats["frames_sampled"] = int(
+            np.asarray(self.carry.step).sum()
+        )
+        self.stats["final_cache"] = self._cache
+        return self.carry, self.traces, self.stats

@@ -90,10 +90,41 @@ def apply_resize(plan: ElasticPlan, schema: Schema, params) -> object:
 
 
 def resize_chunk_stats(n1, n, frames, new_shards: int):
-    """Pad + re-place ExSample chunk statistics for a new shard count."""
+    """Strip previous padding, then re-pad ExSample chunk statistics for a
+    new shard count.
+
+    ``pad_chunks`` appends dummy chunks with the exhausted fill
+    ``n1=0, n=1, frames=0`` (so ``n >= frames`` keeps them unsampleable).
+    Resizing already-padded stats must first strip that trailing dummy run,
+    otherwise padding stacks up across successive resizes (M grows every
+    shrink/grow).  Operates on the LAST axis, matching ``pad_chunks`` —
+    ``[M]`` stats from the solo sharded driver and ``[Q, M]`` stats from
+    the composed multi-query driver both resize with one fill contract (a
+    multi-query chunk column is padding only if it is the fill for EVERY
+    query).  This is an eager host-boundary function: inputs are concrete,
+    so the data-dependent strip is done in numpy.
+    """
     import jax.numpy as jnp
 
-    m = n1.shape[0]
+    if new_shards < 1:
+        raise ValueError(f"new_shards must be >= 1, got {new_shards}")
+    h_n1 = np.asarray(n1)
+    h_n = np.asarray(n)
+    h_frames = np.asarray(frames)
+    dummy = (h_n1 == 0) & (h_n == 1) & (h_frames == 0)
+    if dummy.ndim > 1:
+        dummy = dummy.all(axis=tuple(range(dummy.ndim - 1)))
+    m = h_n1.shape[-1]
+    # Length of the trailing all-dummy run (real chunks are never stripped,
+    # even if an interior chunk happens to match the fill pattern).
+    while m > 0 and dummy[m - 1]:
+        m -= 1
     pad = (-m) % new_shards
-    f = lambda x, fill: jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
-    return f(n1, 0), f(n, 1), f(frames, 0)
+    f = lambda x, fill: jnp.concatenate(
+        [
+            jnp.asarray(x[..., :m]),
+            jnp.full(x.shape[:-1] + (pad,), fill, x.dtype),
+        ],
+        axis=-1,
+    )
+    return f(h_n1, 0), f(h_n, 1), f(h_frames, 0)

@@ -209,6 +209,23 @@ class RepositoryIndex:
         }
         with open(os.path.join(path, _MANIFEST), "w") as fh:
             json.dump(manifest, fh, indent=1)
+        # The manifest is the commit point: anything in the snapshot dir it
+        # does not reference is an orphan from an earlier (larger or
+        # differently-ordered) version set and would otherwise live forever
+        # (ROADMAP item 5, compaction).  Deleting only after the manifest
+        # lands keeps torn intermediates loadable: a crash before this
+        # point leaves extra files, never missing ones.
+        referenced = {_MANIFEST, _PRIORS}
+        referenced.update(meta["file"] for meta in versions.values())
+        for name in os.listdir(path):
+            if name in referenced or not (
+                name.endswith(".npz") or name == _MANIFEST
+            ):
+                continue
+            try:
+                os.remove(os.path.join(path, name))
+            except OSError:
+                pass  # best-effort: a stale file is a leak, not corruption
         return path
 
     def _load(self, path: str) -> None:

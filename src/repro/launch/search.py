@@ -136,6 +136,60 @@ def _print_result(res, args, wall: float) -> None:
               + (" OVERFLOW" if st.merge_overflow else ""))
 
 
+def _run_elastic_smoke(plan, carry, chunks, det, select, args) -> None:
+    """--kill-worker path: drive the plan through ElasticShardedRunner on a
+    synthetic boundary clock, silencing the listed workers after
+    ``--kill-after-windows`` windows; the monitor's dead verdict lands two
+    boundaries later and the search finishes on the shrunken mesh."""
+    import numpy as np
+
+    from repro.core.runtime import ElasticShardedRunner
+    from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+    ex = plan.execution
+    cache = ex.cache if ex.cache is not None else 0
+    if cache == -1:
+        cache = chunks.total_frames
+    t = [0.0]
+
+    def clock():
+        t[0] += 100.0
+        return t[0]
+
+    runner = ElasticShardedRunner(
+        carry, chunks, detector=det, result_limits=plan.result_limit,
+        max_steps=plan.max_steps, num_shards=ex.shards,
+        cohorts=plan.cohorts, sync_every=ex.sync_every, select=select,
+        cache_frames=cache,
+        monitor=HeartbeatMonitor(suspect_after_s=50.0, dead_after_s=150.0),
+        clock=clock, sync_windows=1,
+    )
+    t0 = time.time()
+    windows = 0
+    while True:
+        alive = runner.step()
+        windows += 1
+        if windows == args.kill_after_windows:
+            for w in args.kill_worker:
+                print(f"elastic: worker {w} silenced after window {windows}")
+                runner.kill_worker(w)
+        if not alive:
+            break
+    wall = time.time() - t0
+    out, stats = runner.carry, runner.stats
+    for ev in stats["reshard_events"]:
+        print(f"elastic: reshard @window {ev['window']}: "
+              f"{ev['from_shards']} -> {ev['to_shards']} shards "
+              f"(dead={ev['dead']})")
+    results = np.asarray(out.results).tolist()
+    print(f"elastic: finished on {runner.num_shards} shards: "
+          f"{sum(results)} results / "
+          f"{int(np.asarray(out.step).sum()):,} frames sampled / "
+          f"{stats['detector_invocations']:,} detector invocations "
+          f"({stats['cache_hits']:,} cache hits) "
+          f"(driver wall {wall:.1f}s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--plan", default="",
@@ -169,6 +223,14 @@ def main() -> None:
                     help="[deprecated: use --plan] detection-cache capacity "
                          "for --queries (-1 = one slot per repository "
                          "frame, 0 = off)")
+    ap.add_argument("--kill-worker", type=int, action="append", default=[],
+                    metavar="W",
+                    help="elastic-shrink smoke (multi-sharded plans only): "
+                         "silence worker W mid-run and recover on the "
+                         "survivors via ElasticShardedRunner (repeatable)")
+    ap.add_argument("--kill-after-windows", type=int, default=2,
+                    help="sync windows to run before the --kill-worker "
+                         "workers go silent")
     ap.add_argument("--baseline", action="store_true",
                     help="also run random+ for comparison")
     ap.add_argument("--seed", type=int, default=0)
@@ -229,6 +291,14 @@ def main() -> None:
             init_state(chunks.length), init_matcher(max_results=8192),
             jax.random.PRNGKey(args.seed),
         )
+
+    if args.kill_worker:
+        if lowered.kind != "multi_sharded":
+            raise SystemExit(
+                "--kill-worker needs a queries_axis + shards>1 plan "
+                f"(multi_sharded lowering, got {lowered.kind})")
+        _run_elastic_smoke(plan, carry, chunks, det, select, args)
+        return
 
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.time()

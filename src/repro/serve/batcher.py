@@ -15,9 +15,16 @@ frames into one detector batch without dropping any slot, and
 ``DetectionCache`` is a direct-mapped, device-resident cache of raw
 detector output so a frame decoded+detected for one query is reused by
 every later query that samples it (the Focus/EKO shared-ingest
-economics).  The composed driver instantiates one cache per shard and
-keeps them replicas by all-gathering each round's fresh detections, so a
-frame detected on any shard hits everywhere from the next round on.
+economics).  The composed driver HASH-SHARDS one logical cache over the
+mesh (DESIGN.md §14): frame ``f`` lives only on shard ``f % S`` at local
+slot ``(f // S) % (capacity // S)``, and per-round lookups/inserts route
+between requester and home shard with ``all_to_all`` collectives.  With
+``capacity % S == 0`` that placement is a pure transposition of the
+direct-mapped slot map, so contents, evictions, and hit/miss outcomes are
+bit-identical to a single direct-mapped cache of the same capacity —
+``shard_cache_layout`` / ``unshard_cache_layout`` are the two sides of
+that bijection, and ``sharded_cache_lookup`` / ``sharded_cache_insert``
+are the per-shard halves the drivers run inside ``shard_map``.
 """
 from __future__ import annotations
 
@@ -189,5 +196,148 @@ def cache_insert(
     tag = cache.tag.at[tgt].set(frame_ids, mode="drop")
     store = jax.tree.map(
         lambda st, v: st.at[tgt].set(v, mode="drop"), cache.store, dets
+    )
+    return DetectionCache(tag=tag, store=store)
+
+
+# ---------------------------------------------------------------------------
+# Hash-sharded cache: one logical copy across the mesh (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# Placement: with total capacity S·L (L = capacity // num_shards), frame f
+# lives on home shard ``f % S`` at local slot ``(f // S) % L``.  Writing
+# r = f % (S·L) for the direct-mapped slot, the home is ``r % S`` and the
+# local slot is ``r // S`` — i.e. the sharded layout is EXACTLY the
+# direct-mapped slot array reshaped [L, S] and transposed to [S, L].  Two
+# frames collide under the sharded placement iff f1 ≡ f2 (mod S·L), the
+# same collision classes as the direct-mapped cache, so per-slot contents,
+# evictions, and hit/miss outcomes are bit-identical at equal capacity —
+# only WHERE each slot physically lives changes.
+
+
+def _cache_local_cap(capacity: int, num_shards: int) -> int:
+    if capacity % num_shards:
+        raise ValueError(
+            f"hash-sharded cache capacity {capacity} must be a multiple of "
+            f"{num_shards} shards — pad the capacity before init/warm "
+            "(a non-divisible capacity would silently mis-place frames)"
+        )
+    return capacity // num_shards
+
+
+def shard_cache_layout(cache: DetectionCache, num_shards: int) -> DetectionCache:
+    """Permute a direct-mapped cache into the hash-sharded global layout:
+    index ``s·L + j`` of the result holds direct-mapped slot ``j·S + s``,
+    so sharding the leading axis over the mesh hands shard ``s`` exactly
+    its home entries (frames with ``f % S == s``) at local slot
+    ``(f // S) % L``.  A pure transposition — bit-exact inverse of
+    :func:`unshard_cache_layout`."""
+    cap = cache.capacity
+    local = _cache_local_cap(cap, num_shards)
+    perm = lambda x: (
+        x.reshape((local, num_shards) + x.shape[1:])
+        .swapaxes(0, 1)
+        .reshape((cap,) + x.shape[1:])
+    )
+    return DetectionCache(
+        tag=perm(cache.tag), store=jax.tree.map(perm, cache.store)
+    )
+
+
+def unshard_cache_layout(cache: DetectionCache, num_shards: int) -> DetectionCache:
+    """Inverse of :func:`shard_cache_layout`: back to the direct-mapped
+    layout every host-side consumer (``cache_lookup``, index publish,
+    parity tests) understands."""
+    cap = cache.capacity
+    local = _cache_local_cap(cap, num_shards)
+    perm = lambda x: (
+        x.reshape((num_shards, local) + x.shape[1:])
+        .swapaxes(0, 1)
+        .reshape((cap,) + x.shape[1:])
+    )
+    return DetectionCache(
+        tag=perm(cache.tag), store=jax.tree.map(perm, cache.store)
+    )
+
+
+def reshard_cache_host(cache: DetectionCache, new_capacity: int) -> DetectionCache:
+    """Re-place a direct-mapped cache into a NEW capacity (host-side,
+    eager): occupied entries re-map to ``frame % new_capacity`` in
+    ascending frame-id order, first occupant wins — the same deterministic
+    fill convention as ``RepositoryIndex.warm``, so an elastic mesh shrink
+    that changes the divisibility-padded capacity replays identically on
+    every survivor.  A no-op (same object) when the capacity already
+    matches."""
+    if new_capacity == cache.capacity:
+        return cache
+    if new_capacity < 1:
+        raise ValueError(f"new_capacity must be >= 1, got {new_capacity}")
+    tag_h = np.asarray(cache.tag)
+    leaves, treedef = jax.tree.flatten(cache.store)
+    leaves_h = [np.asarray(leaf) for leaf in leaves]
+    new_tag = np.full((new_capacity,), -1, np.int32)
+    new_leaves = [
+        np.zeros((new_capacity,) + leaf.shape[1:], leaf.dtype)
+        for leaf in leaves_h
+    ]
+    occupied = np.flatnonzero(tag_h >= 0)
+    for src in occupied[np.argsort(tag_h[occupied], kind="stable")]:
+        f = int(tag_h[src])
+        slot = f % new_capacity
+        if new_tag[slot] != -1:
+            continue
+        new_tag[slot] = f
+        for k, leaf in enumerate(leaves_h):
+            new_leaves[k][slot] = leaf[src]
+    return DetectionCache(
+        tag=jnp.asarray(new_tag),
+        store=jax.tree.unflatten(
+            treedef, [jnp.asarray(x) for x in new_leaves]
+        ),
+    )
+
+
+def sharded_cache_lookup(
+    cache_local: DetectionCache,
+    frame_ids: jax.Array,
+    shard_id: jax.Array,
+    num_shards: int,
+):
+    """Home-shard half of the routed lookup, run per shard inside
+    ``shard_map``: serve exactly the probes homed here (``frame % S ==
+    shard_id``); everything else — sentinels included — reports a miss
+    with unread gathered values.  ``frame_ids`` may be any shape."""
+    local = cache_local.capacity
+    mine = (frame_ids >= 0) & (frame_ids % num_shards == shard_id)
+    slot = (frame_ids // num_shards) % local
+    hit = mine & (cache_local.tag[slot] == frame_ids)
+    vals = jax.tree.map(lambda x: x[slot], cache_local.store)
+    return hit, vals
+
+
+def sharded_cache_insert(
+    cache_local: DetectionCache,
+    frame_ids: jax.Array,
+    dets: Any,
+    mask: jax.Array,
+    shard_id: jax.Array,
+    num_shards: int,
+) -> DetectionCache:
+    """Home-shard half of the routed insert (flat [B] batch, already
+    routed here): store masked frames homed on this shard at their local
+    slots, first-write-wins on within-batch slot collisions in batch
+    order — the same winner the direct-mapped :func:`cache_insert` picks
+    over the equivalent global batch."""
+    local = cache_local.capacity
+    valid = (
+        mask & (frame_ids >= 0) & (frame_ids % num_shards == shard_id)
+    )
+    slot = ((frame_ids // num_shards) % local).astype(jnp.int32)
+    first = dedup_first_index(slot, valid)
+    keep = valid & (first == jnp.arange(slot.shape[0], dtype=jnp.int32))
+    tgt = jnp.where(keep, slot, local)
+    tag = cache_local.tag.at[tgt].set(frame_ids, mode="drop")
+    store = jax.tree.map(
+        lambda st, v: st.at[tgt].set(v, mode="drop"), cache_local.store, dets
     )
     return DetectionCache(tag=tag, store=store)

@@ -148,6 +148,14 @@ class Tenant:
                 actual_s=self.actual_s,
                 **self.slo_report(),
             )
+        if self.state == FINISHED:
+            # per-tenant economics: what admission reserved vs what the
+            # tenant really cost once settled (credit = headroom returned)
+            d["projected_vs_settled"] = {
+                "projected_s": self.projected_s,
+                "settled_s": self.actual_s,
+                "credited_s": self.projected_s - self.actual_s,
+            }
         return d
 
 
@@ -189,6 +197,7 @@ class SearchService:
         self.rates = rates
         self.budget = CostBudget(total_s=budget_s)
         self.index = index
+        self.total_frames = int(chunks.total_frames)
         self.driver = AsyncMultiSearchDriver(
             carry_proto, chunks, detector,
             cohorts=cohorts, num_workers=num_workers,
@@ -263,7 +272,10 @@ class SearchService:
                     "must be a clean miss, not a silent replay",
                     field="detector_version")
         svc = plan.execution.service or ServiceConfig()
-        projected = plan_projected_cost(plan, self.rates).total_s
+        projected = plan_projected_cost(
+            plan, self.rates, index=self.index,
+            total_frames=self.total_frames,
+        ).total_s
         tenant = Tenant(
             tenant_id=tenant_id,
             plan=plan,

@@ -106,15 +106,45 @@ def full_scan_cost(total_frames: int, rates: CostRates) -> PhaseCosts:
 # ---------------------------------------------------------------------------
 
 
-def plan_projected_cost(plan, rates: CostRates) -> PhaseCosts:
+def plan_projected_cost(
+    plan,
+    rates: CostRates,
+    *,
+    index=None,
+    total_frames: Optional[int] = None,
+) -> PhaseCosts:
     """Conservative admission-time price of a :class:`SearchPlan`: every
     query runs its full ``max_steps`` frame budget as a pure sampling
     policy.  An upper bound by construction — queries that hit their
     result limit early, and frames served from the detection cache, only
     make the realized cost cheaper — so pricing it BEFORE admission is
     race-free: the service debits the projection and credits the unspent
-    remainder at retirement."""
-    return sampling_cost(plan.queries * plan.max_steps, rates)
+    remainder at retirement.
+
+    When the plan binds an :class:`~repro.core.plan.IndexSpec` and the
+    caller passes the live ``index`` plus the repository ``total_frames``,
+    the detector component is discounted by the index's measured coverage
+    for the plan's declared ``detector_version`` — a fully-persisted warm
+    replay needs ~0 fresh detector calls, and pricing it cold rejects
+    plans that cost nearly nothing.  Still an upper bound: coverage is a
+    frame-population fraction (sampling without the exact hit set can only
+    do better on average than the uniform discount assumes is certain),
+    and the projection is clamped to ≥ the scan-only cost — every sampled
+    frame pays its random-access read even when its detection replays."""
+    frames = plan.queries * plan.max_steps
+    cold = sampling_cost(frames, rates)
+    spec = getattr(plan.execution, "index", None)
+    if index is None or spec is None or not total_frames:
+        return cold
+    coverage = min(
+        1.0, index.entries(spec.detector_version) / float(total_frames)
+    )
+    if coverage <= 0.0:
+        return cold
+    detect_s = frames * (1.0 - coverage) / rates.detect_fps
+    scan_only_s = frames / rates.random_read_fps
+    sample_s = max(detect_s + scan_only_s, scan_only_s) / rates.workers
+    return PhaseCosts(sample_s=min(sample_s, cold.sample_s))
 
 
 @dataclasses.dataclass

@@ -1,6 +1,9 @@
 """Fault tolerance: heartbeats, stragglers, restarts, batcher, elastic."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core.chunks import build_chunks
 from repro.core.state import init_state
@@ -188,6 +191,49 @@ def test_resize_chunk_stats_pads_exhausted():
     assert float(n[-1]) == 1
 
 
+@settings(max_examples=60, deadline=None)
+@given(
+    m=st.integers(1, 37),
+    seed=st.integers(0, 1000),
+    shards=st.lists(st.integers(1, 8), min_size=1, max_size=5),
+)
+def test_resize_chunk_stats_strips_then_repads(m, seed, shards):
+    """Property (pre-fix failure): resizing already-padded stats must not
+    stack padding — after ANY shrink/grow sequence the length is always
+    ``real_m`` rounded up to the CURRENT shard count, the real prefix is
+    untouched, and every padded chunk keeps the ``pad_chunks`` exhausted
+    fill ``n1=0, n=1, frames=0``."""
+    rng = np.random.default_rng(seed)
+    real_n1 = rng.integers(0, 4, size=m).astype(np.float32)
+    real_frames = rng.integers(1, 30, size=m).astype(np.int32)
+    real_n = np.minimum(
+        rng.integers(0, 6, size=m), real_frames
+    ).astype(np.float32) + real_n1
+    n1, n, frames = jnp.asarray(real_n1), jnp.asarray(real_n), jnp.asarray(real_frames)
+    for s in shards:
+        n1, n, frames = resize_chunk_stats(n1, n, frames, new_shards=s)
+        want = m + (-m) % s
+        assert n1.shape == n.shape == frames.shape == (want,)
+        np.testing.assert_array_equal(np.asarray(n1[:m]), real_n1)
+        np.testing.assert_array_equal(np.asarray(n[:m]), real_n)
+        np.testing.assert_array_equal(np.asarray(frames[:m]), real_frames)
+        assert np.all(np.asarray(n1[m:]) == 0)
+        assert np.all(np.asarray(n[m:]) == 1)      # n >= frames ⇒ exhausted
+        assert np.all(np.asarray(frames[m:]) == 0)
+
+
+def test_resize_chunk_stats_keeps_interior_dummy_lookalikes():
+    """Only the TRAILING dummy run is padding; a real interior chunk that
+    happens to match the fill pattern must survive resizing."""
+    n1 = jnp.asarray([1.0, 0.0, 2.0, 0.0, 0.0])
+    n = jnp.asarray([3.0, 1.0, 4.0, 1.0, 1.0])
+    frames = jnp.asarray([9, 0, 9, 0, 0], dtype=jnp.int32)  # idx 1 is interior
+    rn1, rn, rframes = resize_chunk_stats(n1, n, frames, new_shards=2)
+    assert rn1.shape[0] == 4                       # 3 real + 1 pad
+    np.testing.assert_array_equal(np.asarray(rframes), [9, 0, 9, 0])
+    np.testing.assert_array_equal(np.asarray(rn1), [1.0, 0.0, 2.0, 0.0])
+
+
 def test_resume_replay_is_bit_exact(tmp_path):
     """Kill-and-restore: state + pipeline cursor reproduce the same batch."""
     from repro.data.pipeline import DeterministicTokenPipeline, TrainBatchSpec
@@ -204,3 +250,253 @@ def test_resume_replay_is_bit_exact(tmp_path):
     b1 = pipe.batch_at(int(restored["cursor"]))
     b2 = pipe.batch_at(5)
     np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# Elastic mesh-shrink recovery (ElasticShardedRunner, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def _elastic_world(seed=11):
+    import jax
+
+    from repro.sim import RepoSpec, generate
+    from repro.sim.oracle import oracle_detect
+
+    spec = RepoSpec(
+        video_lengths=[4_000] * 2, num_instances=60, chunk_frames=500,
+        locality=4.0, seed=seed,
+    )
+    repo, chunks = generate(spec)
+    det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+    return chunks, det
+
+
+def _elastic_carries(chunks, q_n=2):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import init_carry_multi, init_matcher, init_state
+
+    keys = jnp.stack([
+        jax.random.fold_in(jax.random.PRNGKey(0), q) for q in range(q_n)
+    ])
+    return init_carry_multi(
+        init_state(chunks.length), init_matcher(max_results=512), keys
+    )
+
+
+def test_elastic_runner_windowed_matches_single_call():
+    """Resumability contract: slicing the composed driver into bounded
+    ``window_limit`` calls (carry + cache fed back each slice) is
+    bit-identical to one unbounded call — same carries, traces, and
+    summed sharing stats."""
+    from repro.core.executor import run_search_multi_sharded
+    from repro.core.runtime import ElasticShardedRunner
+    from repro.launch.mesh import make_data_mesh
+
+    chunks, det = _elastic_world()
+    one, one_traces, one_stats = run_search_multi_sharded(
+        _elastic_carries(chunks), chunks, mesh=make_data_mesh(1),
+        detector=det, result_limits=8, max_steps=120, cohorts=2,
+        cache_frames=64,
+    )
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    runner = ElasticShardedRunner(
+        _elastic_carries(chunks), chunks, detector=det, result_limits=8,
+        max_steps=120, num_shards=1, cohorts=2, cache_frames=64,
+        clock=clock, sync_windows=2,
+    )
+    out, traces, stats = runner.run()
+    assert not stats["reshard_events"]
+    np.testing.assert_array_equal(np.asarray(out.step), np.asarray(one.step))
+    np.testing.assert_array_equal(
+        np.asarray(out.results), np.asarray(one.results))
+    np.testing.assert_array_equal(
+        np.asarray(out.sampler.n), np.asarray(one.sampler.n))
+    np.testing.assert_array_equal(
+        np.asarray(out.sampler.n1), np.asarray(one.sampler.n1))
+    np.testing.assert_array_equal(np.asarray(out.key), np.asarray(one.key))
+    assert traces == one_traces
+    for k in ("detector_invocations", "cache_hits", "index_hits", "rounds"):
+        assert stats[k] == one_stats[k], k
+    np.testing.assert_array_equal(
+        np.asarray(stats["final_cache"].tag),
+        np.asarray(one_stats["final_cache"].tag),
+    )
+
+
+def test_elastic_runner_handshake_register_silence_verdict():
+    """The recovery handshake on a synthetic clock: workers register at
+    construction, a killed worker goes silent, the boundary sweep returns
+    the dead verdict — and with no survivors the runner refuses to
+    continue rather than losing the search."""
+    import pytest
+
+    from repro.core.runtime import ElasticShardedRunner
+    from repro.distributed.fault_tolerance import WorkerState
+
+    chunks, det = _elastic_world()
+    t = [0.0]
+
+    def clock():
+        t[0] += 100.0
+        return t[0]
+
+    mon = HeartbeatMonitor(suspect_after_s=50.0, dead_after_s=150.0)
+    runner = ElasticShardedRunner(
+        _elastic_carries(chunks), chunks, detector=det, result_limits=10**9,
+        max_steps=500, num_shards=1, cohorts=2, monitor=mon, clock=clock,
+        sync_windows=1,
+    )
+    assert set(mon.workers) == {0}            # registered at construction
+    assert runner.step()                      # boundary 1: heartbeat, alive
+    assert mon.workers[0].state is WorkerState.HEALTHY
+    runner.kill_worker(0)                     # silence begins mid-window
+    assert runner.step()                      # silence 100 < 150: deferred
+    assert mon.workers[0].state is not WorkerState.DEAD
+    with pytest.raises(RuntimeError, match="no surviving workers"):
+        runner.step()                         # silence 200 ≥ 150: verdict
+    assert mon.workers[0].state is WorkerState.DEAD
+
+
+def test_elastic_runner_death_during_final_window_completes():
+    """A worker dying during the final window never triggers a reshard:
+    the window's merged results complete the search on the spot."""
+    from repro.core.runtime import ElasticShardedRunner
+
+    chunks, det = _elastic_world()
+    t = [0.0]
+
+    def clock():
+        t[0] += 1000.0                        # any silence ⇒ instant verdict
+        return t[0]
+
+    runner = ElasticShardedRunner(
+        _elastic_carries(chunks), chunks, detector=det, result_limits=10**9,
+        max_steps=40, num_shards=1, cohorts=2, clock=clock, sync_windows=100,
+    )
+    runner.kill_worker(0)                     # dies while the window runs
+    out, _, stats = runner.run()              # ...which still completes
+    assert not stats["reshard_events"]
+    assert (np.asarray(out.step) == 40).all()
+    occupied = (np.asarray(out.matcher.times_seen) > 0).sum(axis=-1)
+    np.testing.assert_array_equal(occupied, np.asarray(out.results))
+
+
+ELASTIC_SHRINK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import init_carry_multi, init_matcher, init_state
+from repro.core.runtime import ElasticShardedRunner
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.sim import RepoSpec, generate
+from repro.sim.oracle import oracle_detect
+
+spec = RepoSpec(video_lengths=[6_000] * 3, num_instances=120,
+                chunk_frames=600, locality=4.0, seed=13)
+repo, chunks = generate(spec)
+det = lambda key, frame: oracle_detect(repo, frame, query_class=0)
+
+def fresh():
+    keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(0), q)
+                      for q in range(2)])
+    return init_carry_multi(init_state(chunks.length),
+                            init_matcher(max_results=2048), keys)
+
+def run_once():
+    t = [0.0]
+    def clock():
+        t[0] += 100.0
+        return t[0]
+    runner = ElasticShardedRunner(
+        fresh(), chunks, detector=det, result_limits=10**9, max_steps=480,
+        num_shards=8, cohorts=24, cache_frames=chunks.total_frames + 8,
+        monitor=HeartbeatMonitor(suspect_after_s=50.0, dead_after_s=150.0),
+        clock=clock, sync_windows=1,
+    )
+    results_per_slice, slices = [], 0
+    while True:
+        alive = runner.step()
+        slices += 1
+        results_per_slice.append(np.asarray(runner.carry.results).copy())
+        if slices == 2:
+            runner.kill_worker(7)   # dies while window 3 is in flight
+        if not alive:
+            break
+    return runner, results_per_slice
+
+runner, per_slice = run_once()
+out, traces, stats = runner.carry, runner.traces, runner.stats
+
+# drain-and-reshard: exactly one shrink, 8 -> 6 (largest k <= 7 surviving
+# workers with cohorts=24 % k == 0), landing at the boundary where the
+# silence crosses dead_after_s — window 3 ran to completion first
+assert len(stats["reshard_events"]) == 1, stats["reshard_events"]
+ev = stats["reshard_events"][0]
+assert ev["from_shards"] == 8 and ev["to_shards"] == 6, ev
+assert ev["dead"] == [7], ev
+assert ev["window"] == 4, ev           # kill after window 2, verdict 2 boundaries later
+assert runner.num_shards == 6
+
+# the search FINISHED on the shrunken mesh
+assert (np.asarray(out.step) == 480).all(), np.asarray(out.step)
+assert stats["rounds"] == 20
+
+# zero merged results lost: counters never regress across any boundary
+# (including the reshard), and the final ring occupancy matches them
+stacked = np.stack(per_slice)
+assert (np.diff(stacked, axis=0) >= 0).all()
+occ = (np.asarray(out.matcher.times_seen) > 0).sum(axis=-1)
+np.testing.assert_array_equal(occ, np.asarray(out.results))
+
+def multiset(carry):
+    seen = np.asarray(carry.matcher.times_seen) > 0
+    vid = np.asarray(carry.matcher.video)
+    frm = np.asarray(carry.matcher.frame)
+    return [sorted(zip(vid[q][seen[q]].tolist(), frm[q][seen[q]].tolist()))
+            for q in range(seen.shape[0])]
+
+# deterministic replay: the same death schedule reproduces the same
+# result multiset, traces, and sharing stats bit-for-bit
+runner2, per_slice2 = run_once()
+out2 = runner2.carry
+np.testing.assert_array_equal(np.asarray(out.step), np.asarray(out2.step))
+np.testing.assert_array_equal(np.asarray(out.results), np.asarray(out2.results))
+np.testing.assert_array_equal(np.asarray(out.sampler.n),
+                              np.asarray(out2.sampler.n))
+assert runner.traces == runner2.traces
+assert multiset(out) == multiset(out2)
+for k in ("detector_invocations", "cache_hits", "rounds"):
+    assert runner.stats[k] == runner2.stats[k], k
+assert runner2.stats["reshard_events"] == stats["reshard_events"]
+print("ELASTIC_OK results=%s invocations=%d hits=%d" %
+      (np.asarray(out.results).tolist(), stats["detector_invocations"],
+       stats["cache_hits"]))
+"""
+
+
+@pytest.mark.slow
+def test_elastic_shrink_recovery_multidevice():
+    """8-way mesh, worker 7 killed mid-flight: drain at the boundary,
+    reshard 8→6, finish the search on the survivors, and replay the same
+    death schedule to the same result multiset (slow subprocess leg)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", ELASTIC_SHRINK_SCRIPT],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert "ELASTIC_OK" in r.stdout, r.stdout[-3000:] + "\n" + r.stderr[-3000:]

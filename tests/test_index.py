@@ -169,6 +169,95 @@ def test_cache_within_batch_first_write_wins():
     assert not bool(hit[1]), "second colliding write must lose, not race"
 
 
+def test_shard_cache_layout_roundtrip_and_divisibility():
+    from repro.serve.batcher import shard_cache_layout, unshard_cache_layout
+
+    cache = _toy_cache(12)
+    frames = jnp.asarray([0, 5, 7, 11, 17], jnp.int32)
+    cache = cache_insert(
+        cache, frames, frames.astype(jnp.float32), jnp.ones(5, bool)
+    )
+    for s in (1, 2, 3, 4, 6):
+        back = unshard_cache_layout(shard_cache_layout(cache, s), s)
+        np.testing.assert_array_equal(
+            np.asarray(back.tag), np.asarray(cache.tag))
+        np.testing.assert_array_equal(
+            np.asarray(back.store), np.asarray(cache.store))
+    with pytest.raises(ValueError, match="multiple"):
+        shard_cache_layout(cache, 5)
+
+
+@hypothesis.given(
+    capacity_l=st.integers(min_value=1, max_value=4),
+    num_shards=st.sampled_from([1, 2, 3, 4]),
+    batches=st.lists(
+        st.lists(
+            st.tuples(
+                st.integers(min_value=-1, max_value=40), st.booleans()
+            ),
+            min_size=1, max_size=6,
+        ),
+        min_size=1, max_size=3,
+    ),
+)
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_sharded_cache_bit_identical_to_direct_mapped(
+    capacity_l, num_shards, batches
+):
+    """The §14 contract: hash-sharding is a pure re-placement.  Running
+    every insert batch through the per-shard halves (each shard filters
+    the batch to its homed frames) and re-assembling must reproduce the
+    direct-mapped cache bit for bit, and the OR of per-shard lookups must
+    equal the direct-mapped lookup — hits, values, evictions, and
+    within-batch collision winners included."""
+    from repro.serve.batcher import (
+        shard_cache_layout,
+        sharded_cache_insert,
+        sharded_cache_lookup,
+        unshard_cache_layout,
+    )
+
+    capacity = capacity_l * num_shards
+    direct = _toy_cache(capacity)
+    locals_ = [
+        jax.tree.map(
+            lambda x: x[s * capacity_l:(s + 1) * capacity_l],
+            shard_cache_layout(_toy_cache(capacity), num_shards),
+        )
+        for s in range(num_shards)
+    ]
+    for batch in batches:
+        frames = jnp.asarray([f for f, _ in batch], jnp.int32)
+        mask = jnp.asarray([m for _, m in batch])
+        vals = frames.astype(jnp.float32)
+        direct = cache_insert(direct, frames, vals, mask)
+        locals_ = [
+            sharded_cache_insert(c, frames, vals, mask, s, num_shards)
+            for s, c in enumerate(locals_)
+        ]
+    assembled = unshard_cache_layout(
+        jax.tree.map(lambda *xs: jnp.concatenate(xs), *locals_), num_shards
+    )
+    np.testing.assert_array_equal(
+        np.asarray(assembled.tag), np.asarray(direct.tag))
+    np.testing.assert_array_equal(
+        np.asarray(assembled.store), np.asarray(direct.store))
+    probes = jnp.asarray(
+        sorted({f for b in batches for f, _ in b} | {-1}), jnp.int32
+    )
+    d_hit, d_vals = cache_lookup(direct, probes)
+    s_hits, s_vals = zip(*[
+        sharded_cache_lookup(c, probes, s, num_shards)
+        for s, c in enumerate(locals_)
+    ])
+    or_hit = np.logical_or.reduce([np.asarray(h) for h in s_hits])
+    np.testing.assert_array_equal(or_hit, np.asarray(d_hit))
+    for i in range(len(probes)):
+        if bool(d_hit[i]):
+            s = int(probes[i]) % num_shards
+            assert float(s_vals[s][i]) == float(d_vals[i])
+
+
 def test_cache_sentinel_never_hits_nor_inserts():
     cache = _toy_cache(4)
     # a masked-True sentinel must still not insert: it would tag slot
@@ -278,6 +367,39 @@ def test_index_warm_collision_deterministic():
     hit, vals = cache_lookup(cache, jnp.asarray([3, 7, 11], jnp.int32))
     assert [bool(h) for h in hit] == [True, False, False]
     assert float(vals[0]) == 3.0
+
+
+def test_index_snapshot_orphan_cleanup(tmp_path):
+    """Regression: shrinking the version set between snapshots used to
+    orphan the higher-numbered ``detections_<i>.npz`` forever.  After the
+    second save the directory must hold exactly the manifest + files it
+    references, and the torn-intermediate state (old manifest + extra
+    files, before cleanup) must still load."""
+    import os
+
+    path = str(tmp_path / "idx")
+    idx = RepositoryIndex(path, detector_version="v1")
+    _publish_frames(idx, [1, 2])
+    idx.detector_version = "v2"
+    _publish_frames(idx, [3])
+    idx.save()                                  # 2 versions → 2 npz files
+    assert sorted(os.listdir(path)) == [
+        "detections_0.npz", "detections_1.npz", "manifest.json", "priors.npz",
+    ]
+    # simulate the torn intermediate: extra unreferenced npz on disk
+    with open(os.path.join(path, "detections_7.npz"), "wb") as fh:
+        fh.write(b"torn")
+    assert RepositoryIndex(path).stats["loaded"] == 3, (
+        "unreferenced stray files must not break _load"
+    )
+    idx2 = RepositoryIndex(path, detector_version="v2")
+    idx2._tiers.pop("v1")                       # version set shrinks
+    idx2.save()                                 # 1 version → 1 npz file
+    assert sorted(os.listdir(path)) == [
+        "detections_0.npz", "manifest.json", "priors.npz",
+    ], "orphans (incl. the stray) deleted after the manifest lands"
+    idx3 = RepositoryIndex(path, detector_version="v2")
+    assert idx3.stats["loaded"] == 1 and idx3.lookup(3) is not None
 
 
 def test_index_rejects_incompatible_snapshot(tmp_path):

@@ -11,6 +11,7 @@ live driver with admission rejections/queueing and verifies zero result
 loss (``results == ring live entries + len(ResultLog)`` per tenant).
 """
 import argparse
+import dataclasses
 import warnings
 
 import jax
@@ -135,6 +136,98 @@ def test_projection_matches_costmodel(world):
     plan = _plan(max_steps=777)
     assert plan_projected_cost(plan, RATES).total_s == pytest.approx(
         777 * FRAME_S)
+
+
+def test_warm_plan_admitted_where_cold_projection_rejects(world):
+    """Regression (warm-plan over-pricing): a plan whose detections are
+    ~90% persisted in the shared index was still priced as if every frame
+    paid a fresh detector call, so admission rejected it under budgets it
+    trivially fits.  The coverage-discounted projection must admit it,
+    stay ≥ the scan-only floor, and settle normally with the credit
+    surfaced in per-tenant economics."""
+    from repro.core.plan import IndexSpec
+    from repro.index.store import RepositoryIndex
+
+    _, chunks, det = world
+    index = RepositoryIndex(detector_version="v1")
+    covered = int(0.9 * chunks.total_frames)
+    f = jnp.arange(covered, dtype=jnp.int32)
+    index.publish(f, f.astype(jnp.float32))
+    coverage = covered / chunks.total_frames
+
+    ms = 1500
+    cold = plan_projected_cost(_plan(max_steps=ms), RATES).total_s
+    assert cold == pytest.approx(ms * FRAME_S)
+
+    warm_plan = SearchPlan(
+        result_limit=8, max_steps=ms, cohorts=2,
+        execution=Execution(
+            queries_axis=True, index=IndexSpec(detector_version="v1"),
+        ),
+    )
+    warm = plan_projected_cost(
+        warm_plan, RATES, index=index, total_frames=chunks.total_frames
+    ).total_s
+    scan_floor = ms / RATES.random_read_fps
+    assert warm == pytest.approx(
+        ms * ((1 - coverage) / RATES.detect_fps + 1 / RATES.random_read_fps))
+    assert scan_floor <= warm < cold
+
+    # a budget between warm and cold: rejects the cold projection,
+    # admits the coverage-discounted one
+    budget = 0.5 * (warm + cold)
+    svc = _service(chunks, det, budget_s=budget, index=index)
+    t = svc.submit("warm", warm_plan, key=_qkey(0))
+    assert t.state == RUNNING
+    assert t.projected_s == pytest.approx(warm)
+    assert svc.budget.committed_s == pytest.approx(warm)
+    _drain_sync(svc)
+    assert t.state == FINISHED
+    assert svc.budget.committed_s == pytest.approx(0.0)
+    steps = int(t.row_obj.carry.step)
+    assert t.actual_s == pytest.approx(steps * FRAME_S)
+    econ = t.to_dict()["projected_vs_settled"]
+    assert econ["projected_s"] == pytest.approx(warm)
+    assert econ["settled_s"] == pytest.approx(t.actual_s)
+    assert econ["credited_s"] == pytest.approx(warm - t.actual_s)
+
+
+def test_warm_projection_requires_index_binding(world):
+    """No IndexSpec on the plan, or no live index/total_frames at the
+    call, keeps the cold upper bound — the discount never applies by
+    accident."""
+    from repro.index.store import RepositoryIndex
+
+    _, chunks, _ = world
+    index = RepositoryIndex(detector_version="v1")
+    f = jnp.arange(100, dtype=jnp.int32)
+    index.publish(f, f.astype(jnp.float32))
+    plan = _plan(max_steps=500)                # no IndexSpec
+    cold = 500 * FRAME_S
+    assert plan_projected_cost(
+        plan, RATES, index=index, total_frames=chunks.total_frames
+    ).total_s == pytest.approx(cold)
+    from repro.core.plan import IndexSpec
+    bound = SearchPlan(
+        result_limit=8, max_steps=500,
+        execution=Execution(
+            queries_axis=True, index=IndexSpec(detector_version="v1"),
+        ),
+    )
+    assert plan_projected_cost(bound, RATES).total_s == pytest.approx(cold)
+    assert plan_projected_cost(
+        bound, RATES, index=index, total_frames=0
+    ).total_s == pytest.approx(cold)
+    # wrong detector version reads an empty tier: no discount
+    assert plan_projected_cost(
+        dataclasses.replace(
+            bound,
+            execution=Execution(
+                queries_axis=True, index=IndexSpec(detector_version="v9"),
+            ),
+        ),
+        RATES, index=index, total_frames=chunks.total_frames,
+    ).total_s == pytest.approx(cold)
 
 
 def test_budget_settles_actual_and_credits_unspent(world):
